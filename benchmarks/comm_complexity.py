@@ -1,0 +1,26 @@
+"""§3.3 complexity: per-epoch communication bytes vs mode, N, and depth L."""
+from benchmarks.common import bench_scale, emit
+from repro.core import epoch_comm_bytes
+from repro.graph import build_partitions, make_dataset
+from repro.models.gnn import GNNConfig, gnn_specs
+from repro.nn import param_count
+
+
+def run() -> list[dict]:
+    scale = bench_scale()
+    g = make_dataset("reddit-sim", scale=0.2 * scale)
+    sp = build_partitions(g, 4)
+    rows = []
+    for L in (2, 3, 4):
+        cfg = GNNConfig(num_layers=L, in_dim=g.features.shape[1],
+                        hidden_dim=64, num_classes=8)
+        pc = param_count(gnn_specs(cfg))
+        for mode in ("partition", "digest", "propagation"):
+            b = epoch_comm_bytes(mode, sp, g, pc, 64, L, 10)
+            rows.append({"name": f"comm/L={L}/{mode}", "us_per_call": "",
+                         "mbytes_per_epoch": round(b / 1e6, 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+
+def bench_scale() -> float:
+    """REPRO_BENCH_SCALE scales dataset sizes/epochs (default CPU-budget)."""
+    return float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: list[dict]) -> None:
+    """Print benchmark rows as `name,us_per_call,derived` CSV."""
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us},{derived}", flush=True)

@@ -1,0 +1,25 @@
+"""Fig. 3/8: loss and validation F1 over training time, all frameworks.
+
+Emits one row per (mode, eval point) — plotting-ready CSV."""
+from benchmarks.common import bench_scale, emit
+from benchmarks.gnn_common import MODE_LABEL, setup, train_mode
+
+
+def run(model: str = "gcn") -> list[dict]:
+    scale = bench_scale()
+    _, data, cfg = setup("reddit-sim", model=model, scale=0.2 * scale)
+    epochs = max(int(100 * scale), 30)
+    rows = []
+    for mode in ("propagation", "llcg", "digest"):
+        hist, _, _ = train_mode(cfg, data, mode, epochs)
+        for e, t, loss, f1 in zip(hist["epoch"], hist["time"],
+                                  hist["loss"], hist["val_f1"]):
+            rows.append({"name": f"fig3/{model}/{MODE_LABEL[mode]}/e{e}",
+                         "us_per_call": "",
+                         "t_s": round(t, 3), "loss": round(loss, 4),
+                         "val_f1": round(f1, 4)})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,19 @@
+"""Fig. 4: training time per epoch per framework (products stand-in)."""
+from benchmarks.common import bench_scale, emit
+from benchmarks.gnn_common import MODE_LABEL, setup, train_mode
+
+
+def run() -> list[dict]:
+    scale = bench_scale()
+    _, data, cfg = setup("products-sim", scale=0.2 * scale)
+    epochs = max(int(20 * scale), 6)
+    rows = []
+    for mode in ("propagation", "llcg", "partition", "digest"):
+        _, _, per_epoch = train_mode(cfg, data, mode, epochs)
+        rows.append({"name": f"fig4/{MODE_LABEL[mode]}",
+                     "us_per_call": round(per_epoch * 1e6, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

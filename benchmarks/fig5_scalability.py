@@ -1,0 +1,39 @@
+"""Fig. 5: speedup vs number of workers M (1..8), DIGEST vs propagation.
+
+CPU wall-time cannot show multi-device scaling, so this uses the §3.3
+analytic epoch-time model (v5e constants) on the partitioned graph —
+per-worker compute shrinks with M while DIGEST's sync cost is amortized."""
+from benchmarks.common import bench_scale, emit
+from repro.core import epoch_time_model, prepare_graph_data
+from repro.graph import build_partitions, make_dataset
+from repro.models.gnn import GNNConfig, gnn_specs
+from repro.nn import param_count
+
+
+def run() -> list[dict]:
+    scale = bench_scale()
+    g = make_dataset("products-sim", scale=0.3 * scale)
+    cfg = GNNConfig(num_layers=3, in_dim=g.features.shape[1],
+                    hidden_dim=128, num_classes=int(g.labels.max()) + 1)
+    pc = param_count(gnn_specs(cfg))
+    rows = []
+    base = None
+    for m in (1, 2, 4, 8):
+        sp = build_partitions(g, m)
+        times = {mode: epoch_time_model(mode, sp, g, pc, cfg.hidden_dim,
+                                        cfg.num_layers, cfg.in_dim)
+                 for mode in ("digest", "propagation")}
+        if m == 1:
+            base = times["propagation"]["t_epoch"]
+        for mode, t in times.items():
+            rows.append({
+                "name": f"fig5/{mode}/M={m}",
+                "us_per_call": round(t["t_epoch"] * 1e6, 2),
+                "speedup_vs_1gpu_dgl": round(base / t["t_epoch"], 3),
+                "comm_mb": round(t["bytes"] / 1e6, 3),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,26 @@
+"""Fig. 6: sensitivity to the synchronization interval N (1, 5, 10, 20)."""
+from benchmarks.common import bench_scale, emit
+from benchmarks.gnn_common import setup, train_mode
+
+
+def run() -> list[dict]:
+    scale = bench_scale()
+    _, data, cfg = setup("products-sim", scale=0.2 * scale)
+    epochs = max(int(100 * scale), 30)
+    rows = []
+    for interval in (1, 5, 10, 20):
+        hist, _, per_epoch = train_mode(cfg, data, "digest", epochs,
+                                        interval=interval)
+        rows.append({
+            "name": f"fig6/N={interval}",
+            "us_per_call": round(per_epoch * 1e6, 1),
+            "f1": round(hist["val_f1"][-1], 4),
+            "staleness_eps_mean": round(
+                sum(hist["staleness_eps"][-1]) /
+                max(len(hist["staleness_eps"][-1]), 1), 4),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,23 @@
+"""Fig. 9 (appendix): out-of-subgraph / in-subgraph node ratio — the
+memory overhead of buffering halo representations."""
+from benchmarks.common import bench_scale, emit
+from repro.graph import build_partitions, make_dataset
+
+
+def run() -> list[dict]:
+    scale = bench_scale()
+    rows = []
+    for ds in ("arxiv-sim", "flickr-sim", "reddit-sim", "products-sim"):
+        g = make_dataset(ds, scale=0.25 * scale)
+        sp = build_partitions(g, 4)
+        ratio = sp.halo_ratio()
+        rows.append({"name": f"fig9/{ds}",
+                     "us_per_call": "",
+                     "halo_ratio_mean": round(float(ratio.mean()), 4),
+                     "halo_ratio_max": round(float(ratio.max()), 4),
+                     "avg_degree": round(g.num_edges / g.num_nodes, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

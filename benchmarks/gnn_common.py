@@ -1,0 +1,51 @@
+"""Shared setup for the paper-replication GNN benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (AsyncSettings, TrainSettings, digest_a_train,
+                        digest_train, prepare_graph_data)
+from repro.graph import make_dataset
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+DATASETS = ["arxiv-sim", "flickr-sim", "reddit-sim", "products-sim"]
+
+# Mode → the framework it stands in for in the paper's tables.
+MODE_LABEL = {"partition": "Partition-only", "llcg": "LLCG",
+              "propagation": "DGL", "digest": "DIGEST",
+              "digest_a": "DIGEST-A"}
+
+
+def setup(dataset: str, model: str = "gcn", num_parts: int = 4,
+          scale: float = 0.35, hidden: int = 64, seed: int = 0):
+    g = make_dataset(dataset, scale=scale, seed=seed)
+    data = prepare_graph_data(g, num_parts, seed=seed)
+    cfg = GNNConfig(model=model, num_layers=3 if model == "gcn" else 2,
+                    in_dim=g.features.shape[1], hidden_dim=hidden,
+                    num_classes=int(g.labels.max()) + 1, heads=4)
+    return g, data, cfg
+
+
+def train_mode(cfg, data, mode: str, epochs: int, interval: int = 10,
+               seed: int = 0):
+    """Returns (history, wall_seconds, per-epoch seconds)."""
+    t0 = time.perf_counter()
+    if mode == "llcg":
+        _, hist = digest_train(
+            cfg, adam(5e-3), data,
+            TrainSettings(sync_interval=interval, mode="partition",
+                          llcg_correction=True),
+            epochs=epochs, eval_every=max(epochs // 4, 1), seed=seed)
+    elif mode == "digest_a":
+        _, hist = digest_a_train(
+            cfg, adam(5e-3), data, AsyncSettings(sync_interval=interval),
+            total_rounds=epochs * data["halo_ids"].shape[0],
+            eval_every_rounds=max(epochs // 2, 1), seed=seed)
+    else:
+        _, hist = digest_train(
+            cfg, adam(5e-3), data,
+            TrainSettings(sync_interval=interval, mode=mode),
+            epochs=epochs, eval_every=max(epochs // 4, 1), seed=seed)
+    wall = time.perf_counter() - t0
+    return hist, wall, wall / max(epochs, 1)

@@ -1,0 +1,39 @@
+"""Kernel micro-benchmarks (CPU host timings of the jnp paths; the Pallas
+TPU kernels are validated in interpret mode and characterized structurally
+in the roofline — wall-clock kernel timing needs real hardware)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels.flash_attention import multi_head_attention
+from repro.kernels.spmm import spmm
+from repro.models.attention import chunked_attention
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    # SpMM: aggregation for a 4096-node subgraph, deg 16, d=128.
+    nbr = jnp.asarray(rng.integers(0, 4097, (4096, 16)), jnp.int32)
+    wts = jnp.asarray(rng.random((4096, 16)), jnp.float32)
+    tab = jnp.asarray(rng.normal(size=(4097, 128)), jnp.float32)
+    f = jax.jit(lambda a, b, c: spmm(a, b, c, backend="jnp"))
+    rows.append({"name": "kernel/spmm_4096x16x128",
+                 "us_per_call": round(time_call(f, nbr, wts, tab), 1)})
+    # Attention 2x1024x8x64.
+    q = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 1024, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 1024, 2, 64)), jnp.bfloat16)
+    g = jax.jit(lambda a, b, c: multi_head_attention(a, b, c,
+                                                     backend="jnp"))
+    rows.append({"name": "kernel/attn_dense_1k",
+                 "us_per_call": round(time_call(g, q, k, v), 1)})
+    h = jax.jit(lambda a, b, c: chunked_attention(a, b, c, chunk=256))
+    rows.append({"name": "kernel/attn_chunked_1k",
+                 "us_per_call": round(time_call(h, q, k, v), 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,50 @@
+"""Table 1: F1 + speedup for {LLCG, DGL, DIGEST, DIGEST-A} × GCN/GAT ×
+four dataset stand-ins.
+
+Speedup is reported two ways (both normalized to DGL=propagation):
+  * measured CPU per-epoch wall time (relative behaviour), and
+  * the analytic §3.3 communication-model epoch time with v5e constants
+    (`model_speedup`) — the deployable-cluster prediction.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_scale, emit
+from benchmarks.gnn_common import DATASETS, MODE_LABEL, setup, train_mode
+from repro.core import epoch_time_model
+from repro.models.gnn import gnn_specs
+from repro.nn import param_count
+
+
+def run(models=("gcn", "gat"), datasets=None, epochs=None) -> list[dict]:
+    scale = bench_scale()
+    datasets = datasets or DATASETS
+    epochs = epochs or max(int(120 * scale), 30)
+    rows = []
+    for model in models:
+        for ds in datasets:
+            g, data, cfg = setup(ds, model=model,
+                                 scale=0.3 * scale if ds == "products-sim"
+                                 else 0.35 * scale)
+            pc = param_count(gnn_specs(cfg))
+            base_time = None
+            for mode in ("propagation", "llcg", "digest", "digest_a"):
+                hist, wall, per_epoch = train_mode(cfg, data, mode, epochs)
+                t_model = epoch_time_model(
+                    {"digest_a": "digest", "llcg": "partition"}.get(
+                        mode, mode),
+                    data["_sp"], g, pc, cfg.hidden_dim, cfg.num_layers,
+                    cfg.in_dim)["t_epoch"]
+                if mode == "propagation":
+                    base_time, base_model = per_epoch, t_model
+                rows.append({
+                    "name": f"table1/{model}/{ds}/{MODE_LABEL[mode]}",
+                    "us_per_call": round(per_epoch * 1e6, 1),
+                    "f1": round(hist["val_f1"][-1], 4),
+                    "speedup_measured": round(base_time / per_epoch, 3),
+                    "speedup_model": round(base_model / t_model, 3),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,32 @@
+#!/usr/bin/env python
+"""Quickstart: DIGEST vs the two baseline framework families on a small
+synthetic graph — reproduces the paper's core claim in ~a minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import TrainSettings, digest_train, prepare_graph_data
+from repro.graph import make_dataset
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+
+def main():
+    g = make_dataset("flickr-sim", scale=0.3)
+    print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges")
+    data = prepare_graph_data(g, num_parts=4)
+    cfg = GNNConfig(model="gcn", num_layers=3,
+                    in_dim=g.features.shape[1], hidden_dim=64,
+                    num_classes=int(g.labels.max()) + 1)
+    print(f"{'mode':14s} {'loss':>8s} {'val F1':>8s} {'test F1':>8s}")
+    for mode in ("partition", "propagation", "digest"):
+        _, hist = digest_train(cfg, adam(5e-3), data,
+                               TrainSettings(sync_interval=5, mode=mode),
+                               epochs=80, eval_every=80)
+        print(f"{mode:14s} {hist['loss'][-1]:8.4f} "
+              f"{hist['val_f1'][-1]:8.4f} {hist['test_f1'][-1]:8.4f}")
+    print("\nExpected: digest ≈ propagation (no info loss), both > "
+          "partition; digest communicates ~N× less than propagation.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Serving driver: batched prefill → KV-cache decode, plus the DIGEST
+stale-KV long-context mode.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch phi3-mini-3.8b \
+      --batch 4 --prompt-len 64 --gen 32 --long
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_arch
+from repro.models.transformer import (arch_specs, decode_step, forward,
+                                      init_cache)
+from repro.nn import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--long", action="store_true",
+                    help="use stale-KV block attention (DIGEST mode)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_arch(args.arch)
+    if args.long:
+        cfg = dataclasses.replace(cfg, long_window=32, long_ratio=8)
+    params = init_params(jax.random.PRNGKey(0), arch_specs(cfg))
+    max_seq = args.prompt_len + args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    # Prefill by teacher-forced decode (fills the cache), then generate.
+    cache = init_cache(cfg, args.batch, max_seq, long=args.long)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
+                                               long=args.long))
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, t:t + 1])
+    t_prefill = time.perf_counter() - t0
+
+    generated = []
+    t0 = time.perf_counter()
+    for _ in range(args.gen):
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        generated.append(nxt)
+        logits, cache = step(params, cache, nxt)
+    t_gen = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+
+    mode = "stale-KV (DIGEST)" if args.long else "full KV cache"
+    print(f"arch={cfg.name} (reduced)  mode={mode}")
+    print(f"prefill {args.prompt_len} toks x{args.batch}: "
+          f"{t_prefill:.2f}s; decode {args.gen} toks: "
+          f"{t_gen/args.gen*1e3:.1f} ms/tok")
+    print(f"sample continuation ids: {out[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""End-to-end DIGEST GNN training driver (the paper's experiment):
+dataset build → METIS-style partition → DIGEST training with periodic
+stale sync → eval + checkpointing + communication accounting.
+
+  PYTHONPATH=src python examples/train_digest_gnn.py \
+      --dataset products-sim --parts 8 --epochs 200 --interval 10
+"""
+import argparse
+import json
+import os
+
+from repro.checkpoint import save_checkpoint
+from repro.core import (TrainSettings, digest_train, epoch_comm_bytes,
+                        prepare_graph_data)
+from repro.graph import make_dataset
+from repro.models.gnn import GNNConfig, gnn_specs
+from repro.nn import param_count
+from repro.optim import adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="products-sim")
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--model", default="gcn", choices=["gcn", "gat",
+                                                       "sage"])
+    ap.add_argument("--parts", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=200)
+    ap.add_argument("--interval", type=int, default=10)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/digest_ckpt")
+    args = ap.parse_args()
+
+    g = make_dataset(args.dataset, scale=args.scale)
+    data = prepare_graph_data(g, args.parts)
+    cfg = GNNConfig(model=args.model,
+                    num_layers=3 if args.model != "gat" else 2,
+                    in_dim=g.features.shape[1], hidden_dim=args.hidden,
+                    num_classes=int(g.labels.max()) + 1, heads=4)
+    pc = param_count(gnn_specs(cfg))
+    print(f"dataset={g.name} nodes={g.num_nodes} edges={g.num_edges} "
+          f"parts={args.parts} params={pc:,}")
+    print(f"halo ratio per part: {data['_sp'].halo_ratio().round(2)}")
+
+    state, hist = digest_train(
+        cfg, adam(args.lr), data,
+        TrainSettings(sync_interval=args.interval, mode="digest"),
+        epochs=args.epochs, eval_every=max(args.epochs // 10, 1),
+        verbose=True)
+
+    comm = epoch_comm_bytes("digest", data["_sp"], g, pc, args.hidden,
+                            cfg.num_layers, args.interval)
+    comm_prop = epoch_comm_bytes("propagation", data["_sp"], g, pc,
+                                 args.hidden, cfg.num_layers)
+    print(f"\nfinal: loss={hist['loss'][-1]:.4f} "
+          f"val_f1={hist['val_f1'][-1]:.4f} "
+          f"test_f1={hist['test_f1'][-1]:.4f}")
+    print(f"comm/epoch: digest={comm/1e6:.2f} MB vs "
+          f"propagation={comm_prop/1e6:.2f} MB "
+          f"({comm_prop/comm:.1f}x reduction)")
+    path = save_checkpoint(args.ckpt_dir, args.epochs,
+                           {"params": state["params"]})
+    print(f"checkpoint: {path}")
+    with open(os.path.join(args.ckpt_dir, "history.json"), "w") as f:
+        json.dump(hist, f)
+
+
+if __name__ == "__main__":
+    main()

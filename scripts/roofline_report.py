@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Build the EXPERIMENTS.md §Roofline table from the dry-run JSONL output.
+
+MODEL_FLOPS convention (documented in EXPERIMENTS.md):
+  train    6 · (N_active_body + d·V) · D      (fwd+bwd, remat-free ideal)
+  prefill  2 · (N_active_body + d·V) · D
+  decode   2 · (N_active_body + d·V) · D_step (D_step = batch·1 token)
+divided by 256 chips to match the per-device HLO numbers.
+N_active_body excludes embeddings and, for MoE, counts only the top-k
+(+shared) experts per token. Attention score FLOPs are excluded from
+MODEL_FLOPS (convention), which makes long-prefill ratios read high.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.configs import ALIASES, get_arch               # noqa: E402
+from repro.models.transformer import arch_specs           # noqa: E402
+from repro.nn import param_count                          # noqa: E402
+from repro.launch.specs import SHAPES                     # noqa: E402
+
+NAME_TO_ID = {get_arch(a).name: a for a in ALIASES.values()}
+
+
+def model_flops_per_chip(arch_name: str, shape: str, chips: int) -> float:
+    cfg = get_arch(NAME_TO_ID[arch_name])
+    total = param_count(arch_specs(cfg))
+    embed = cfg.vocab_size * cfg.d_model * 2          # embed + lm_head
+    body = total - embed
+    if cfg.num_experts:
+        n_moe_layers = sum(k == "moe" for k in cfg.pattern) * cfg.repeats
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert
+        body -= inactive * n_moe_layers
+    n_eff = body + cfg.d_model * cfg.vocab_size       # + lm_head matmul
+    sh = SHAPES[shape]
+    if sh["kind"] == "train":
+        toks, mult = sh["batch"] * sh["seq"], 6
+    elif sh["kind"] == "prefill":
+        toks, mult = sh["batch"] * sh["seq"], 2
+    else:
+        toks, mult = sh["batch"], 2
+    return mult * n_eff * toks / chips
+
+
+def suggest(dom: str, row: dict) -> str:
+    if dom == "memory":
+        return ("cut HLO traffic: fewer remat recomputes / bf16 "
+                "master-cast / fuse gather chains")
+    if dom == "collective":
+        return ("reduce all-gather volume: FSDP prefetch reuse, or shard "
+                "weights less aggressively on the slow axis")
+    return "raise MXU utilization: larger per-chip tiles, fewer pad lanes"
+
+
+def emit_table(path: str, inter_pod: bool = False):
+    rows = [json.loads(l) for l in open(path)]
+    # keep the last record per (arch, shape, mesh)
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    extra = " inter-pod GB |" if inter_pod else ""
+    print("| arch | shape | mesh | compute s | memory s | collective s |"
+          f" dominant | MODEL_TFLOP/chip | MF/HLO | fits (GB/chip) |{extra}")
+    print("|---|---|---|---|---|---|---|---|---|---|"
+          + ("---|" if inter_pod else ""))
+    for (arch, shape, mesh), r in sorted(dedup.items()):
+        terms = {"compute": r["compute_term_s"],
+                 "memory": r["memory_term_s"],
+                 "collective": r["collective_term_s"]}
+        dom = max(terms, key=terms.get)
+        mf = model_flops_per_chip(arch, shape, r["chips"])
+        ratio = mf / r["hlo_flops"] if r["hlo_flops"] else float("nan")
+        fit = (r.get("mem_temp_size_in_bytes", 0)
+               + r.get("mem_argument_size_in_bytes", 0)) / 1e9
+        tail = (f" {r.get('inter_pod_bytes', 0)/1e9:.3f} |"
+                if inter_pod else "")
+        print(f"| {arch} | {shape} | {mesh} "
+              f"| {terms['compute']:.3g} | {terms['memory']:.3g} "
+              f"| {terms['collective']:.3g} | **{dom}** "
+              f"| {mf/1e12:.2f} | {ratio:.2f} | {fit:.1f} |{tail}")
+
+
+def main():
+    paths = sys.argv[1:] or ["results/dryrun_single.jsonl"]
+    for i, path in enumerate(paths):
+        if i:
+            print()
+        print(f"### {os.path.basename(path)}\n")
+        emit_table(path, inter_pod="multi" in path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Run the full dry-run matrix (10 archs x 4 shapes x 2 meshes) as isolated
+subprocesses with per-case timeouts and skip-unrolled fallback.
+
+Single-pod cases get the dual (scan + unrolled) pass for true roofline
+costs; multi-pod cases prove lowering/sharding coherence with the fast
+scan pass (costs rescaled by layer count).
+"""
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+ARCHS_CHEAP = ["qwen3-0.6b", "musicgen-large", "phi3-mini-3.8b",
+               "xlstm-1.3b"]
+ARCHS_MED = ["minitron-8b", "recurrentgemma-9b", "llama-3.2-vision-11b"]
+ARCHS_BIG = ["deepseek-coder-33b", "llama4-scout-17b-a16e",
+             "kimi-k2-1t-a32b"]
+SHAPES = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+
+def run_case(arch, shape, multi, out, skip_unrolled, timeout):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape,
+           "--multi-pod", "multi" if multi else "single",
+           "--out", out]
+    if skip_unrolled:
+        cmd.append("--skip-unrolled")
+    t0 = time.time()
+    try:
+        rc = subprocess.call(cmd, env=ENV, timeout=timeout,
+                             stdout=subprocess.DEVNULL,
+                             stderr=subprocess.DEVNULL)
+    except subprocess.TimeoutExpired:
+        rc = -9
+    print(f"{arch:26s} {shape:12s} multi={int(multi)} "
+          f"skip_unrolled={int(skip_unrolled)} rc={rc} "
+          f"{time.time()-t0:6.1f}s", flush=True)
+    return rc
+
+
+def main():
+    os.makedirs(os.path.join(ROOT, "results"), exist_ok=True)
+    single_out = os.path.join(ROOT, "results", "dryrun_single.jsonl")
+    multi_out = os.path.join(ROOT, "results", "dryrun_multi.jsonl")
+    failures = []
+
+    # Phase 1: single-pod, cheap->big, dual pass w/ fallback.
+    for arch in ARCHS_CHEAP + ARCHS_MED + ARCHS_BIG:
+        for shape in SHAPES:
+            big = arch in ARCHS_BIG
+            timeout = 2400 if big else 1500
+            rc = run_case(arch, shape, False, single_out,
+                          skip_unrolled=False, timeout=timeout)
+            if rc != 0:
+                rc = run_case(arch, shape, False, single_out,
+                              skip_unrolled=True, timeout=900)
+                if rc != 0:
+                    failures.append((arch, shape, "single"))
+
+    # Phase 2: multi-pod, scan-only (proves the pod axis shards).
+    for arch in ARCHS_CHEAP + ARCHS_MED + ARCHS_BIG:
+        for shape in SHAPES:
+            rc = run_case(arch, shape, True, multi_out,
+                          skip_unrolled=True, timeout=1800)
+            if rc != 0:
+                failures.append((arch, shape, "multi"))
+
+    print("FAILURES:", json.dumps(failures))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

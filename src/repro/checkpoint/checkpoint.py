@@ -1,0 +1,89 @@
+"""Pytree checkpointing: flattened-key npz payload + JSON manifest.
+
+Atomic (write to tmp, rename), step-indexed, restores into an arbitrary
+template pytree (used for both DIGEST GNN training state and the transformer
+train states).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Pytree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _fmt(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {"step": int(step), "keys": sorted(flat)}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1))
+             for name in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", name))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Pytree,
+                       step: Optional[int] = None) -> tuple[Pytree, int]:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_entries, leaf in paths:
+        key = _SEP.join(_fmt(p) for p in path_entries)
+        if key not in data:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                f"template {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), int(step)

@@ -1,0 +1,57 @@
+"""Config registry: the paper's own GNN configs + 10 assigned architectures.
+
+``get_arch(name)`` returns the full production ArchConfig;
+``get_smoke_arch(name)`` returns the reduced same-family variant used by the
+CPU smoke tests (≤2 layers, d_model ≤ 512, ≤4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.transformer import ArchConfig
+
+ARCH_IDS = [
+    "llama_3_2_vision_11b",
+    "llama4_scout_17b_a16e",
+    "deepseek_coder_33b",
+    "kimi_k2_1t_a32b",
+    "qwen3_0_6b",
+    "recurrentgemma_9b",
+    "xlstm_1_3b",
+    "minitron_8b",
+    "musicgen_large",
+    "phi3_mini_3_8b",
+]
+
+# CLI-friendly aliases (the assignment's dashed ids).
+ALIASES = {
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "minitron-8b": "minitron_8b",
+    "musicgen-large": "musicgen_large",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_arch(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_arch(name: str) -> ArchConfig:
+    return _module(name).SMOKE
+
+
+def all_archs() -> dict[str, ArchConfig]:
+    return {n: get_arch(n) for n in ARCH_IDS}

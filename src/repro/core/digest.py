@@ -1,0 +1,295 @@
+"""DIGEST — synchronous distributed GNN training with periodic stale sync.
+
+One code path implements all three framework families the paper compares
+(§2, Fig. 1) by swapping what the out-of-subgraph halo tables contain:
+
+  mode="digest"       stale reps pulled from the store every N epochs (ours)
+  mode="partition"    nothing — cross-subgraph edges dropped (LLCG-family)
+  mode="propagation"  fresh reps recomputed and exchanged every epoch
+                      (DistDGL-family; exact but communication-heavy)
+
+The epoch function is a single jitted SPMD program: subgraphs are vmapped on
+CPU and sharded over the mesh "data" axis under pjit (see
+repro.launch.train_gnn), which is the Algorithm-1 `for m in parallel` loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stale_store
+from repro.graph.graph import Graph
+from repro.graph.partition import StackedPartitions, build_partitions
+from repro.models.gnn import GNNConfig, gnn_forward, gnn_specs
+from repro.nn import init_params, micro_f1, softmax_cross_entropy
+from repro.optim import Optimizer
+
+Pytree = Any
+
+MODES = ("digest", "partition", "propagation")
+
+
+# ---------------------------------------------------------------------------
+# Data preparation
+# ---------------------------------------------------------------------------
+
+def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
+                       seed: int = 0) -> dict:
+    """Build the jnp data dict consumed by the epoch function."""
+    sp = build_partitions(g, num_parts, method=method, seed=seed)
+    full = build_partitions(g, 1, method="random", seed=seed)
+    x_global = np.concatenate(
+        [g.features, np.zeros((1, g.features.shape[1]), np.float32)], axis=0)
+
+    def _struct(s: StackedPartitions) -> dict:
+        return {"in_nbr": jnp.asarray(s.in_nbr),
+                "in_wts": jnp.asarray(s.in_wts),
+                "out_nbr": jnp.asarray(s.out_nbr),
+                "out_wts": jnp.asarray(s.out_wts)}
+
+    return {
+        "x_global": jnp.asarray(x_global),
+        "struct": _struct(sp),
+        "local_ids": jnp.asarray(sp.local_ids),
+        "local_valid": jnp.asarray(sp.local_valid),
+        "halo_ids": jnp.asarray(sp.halo_ids),
+        "labels": jnp.asarray(sp.labels),
+        "train_mask": jnp.asarray(sp.train_mask),
+        "val_mask": jnp.asarray(sp.val_mask),
+        "test_mask": jnp.asarray(sp.test_mask),
+        # Full-graph (M=1) view for exact eval / propagation mode.
+        "full_struct": _struct(full),
+        "full_ids": jnp.asarray(full.local_ids),
+        "full_valid": jnp.asarray(full.local_valid),
+        "full_labels": jnp.asarray(full.labels),
+        "full_train_mask": jnp.asarray(full.train_mask),
+        "full_val_mask": jnp.asarray(full.val_mask),
+        "full_test_mask": jnp.asarray(full.test_mask),
+        # Host-side metadata (not traced).
+        "_sp": sp,
+        "_graph": g,
+    }
+
+
+def _subgraph_features(x_global: jax.Array, ids: jax.Array) -> jax.Array:
+    return x_global[ids]
+
+
+# ---------------------------------------------------------------------------
+# Single-subgraph loss (shared by every mode and by DIGEST-A)
+# ---------------------------------------------------------------------------
+
+def make_subgraph_loss(cfg: GNNConfig):
+    def loss_fn(params, x_local, halo_tables, struct, labels, mask):
+        tables = [jax.lax.stop_gradient(t) for t in halo_tables]
+        logits, push = gnn_forward(cfg, params, x_local, tables, struct)
+        loss = softmax_cross_entropy(logits, labels, mask)
+        return loss, (jnp.stack(push) if push else
+                      jnp.zeros((0,) + x_local.shape), logits)
+    return loss_fn
+
+
+def full_graph_forward(cfg: GNNConfig, params: Pytree, data: dict
+                       ) -> jax.Array:
+    """Exact (no staleness, no partition) forward; returns (N_pad, classes)."""
+    x = _subgraph_features(data["x_global"], data["full_ids"][0])
+    # Halo is empty in the M=1 view: all out_nbr are sentinels. Supply
+    # small correctly-shaped zero tables and remap sentinels into them.
+    struct = {k: v[0] for k, v in data["full_struct"].items()}
+    H = 8
+    tables = [jnp.zeros((H, cfg.in_dim), jnp.float32)]
+    tables += [jnp.zeros((H, cfg.hidden_dim), jnp.float32)
+               for _ in range(cfg.num_layers - 1)]
+    # Remap sentinel halo ids to the small dummy table's sentinel.
+    struct = dict(struct)
+    struct["out_nbr"] = jnp.minimum(struct["out_nbr"], H)
+    logits, reps = gnn_forward(cfg, params, x, tables, struct)
+    return logits, reps
+
+
+# ---------------------------------------------------------------------------
+# The DIGEST epoch (Algorithm 1, one global round r)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    sync_interval: int = 10          # N of Algorithm 1
+    mode: str = "digest"
+    pull_on_first_epoch: bool = False  # paper pulls only at r % N == 0
+    # LLCG-style server correction (for the partition-based baseline): one
+    # extra server-side gradient step per round on a sampled node batch
+    # with FULL neighbor information [Ramezani et al. 2021].
+    llcg_correction: bool = False
+    correction_frac: float = 0.1
+    correction_lr: float = 1e-3
+
+
+def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings
+                  ) -> Callable:
+    if settings.mode not in MODES:
+        raise ValueError(settings.mode)
+    loss_fn = make_subgraph_loss(cfg)
+
+    def epoch_fn(state: dict, data: dict) -> tuple[dict, dict]:
+        r = state["epoch"] + 1            # 1-indexed, as in Algorithm 1
+        x_halo0 = data["x_global"][data["halo_ids"]]        # (M, H, d)
+        M = data["halo_ids"].shape[0]
+        H = data["halo_ids"].shape[1]
+
+        if settings.mode == "partition":
+            halo_cache = jnp.zeros_like(state["halo_cache"])
+            x_halo0 = jnp.zeros_like(x_halo0)
+        elif settings.mode == "propagation":
+            # Fresh exchange every epoch: exact reps at current params.
+            _, reps = full_graph_forward(cfg, state["params"], data)
+            fresh = jnp.stack(
+                [jnp.concatenate(
+                    [rep, jnp.zeros((1, rep.shape[-1]), rep.dtype)], 0)
+                 for rep in reps])                        # (L-1, N+1, hid)
+            halo_cache = jnp.swapaxes(
+                fresh[:, data["halo_ids"], :], 0, 1)      # (M, L-1, H, hid)
+        else:  # digest
+            do_pull = (r % settings.sync_interval == 0)
+            if settings.pull_on_first_epoch:
+                do_pull = do_pull | (r == 1)
+            halo_cache = jax.lax.cond(
+                do_pull,
+                lambda: stale_store.pull(state["store"], data["halo_ids"]),
+                lambda: state["halo_cache"])
+
+        x_local = data["x_global"][data["local_ids"]]       # (M, S, d)
+
+        def per_subgraph_tables(m_cache):
+            # m_cache: (L-1, H, hid) → list of per-layer tables
+            return [m_cache[i] for i in range(cfg.num_layers - 1)]
+
+        def sub_loss(params, x_loc, x_h0, m_cache, struct, labels, mask):
+            tables = [x_h0] + per_subgraph_tables(m_cache)
+            return loss_fn(params, x_loc, tables, struct, labels, mask)
+
+        vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
+                      in_axes=(None, 0, 0, 0, 0, 0, 0))
+        (losses, (push_reps, logits)), grads = vg(
+            state["params"], x_local, x_halo0, halo_cache,
+            data["struct"], data["labels"], data["train_mask"])
+
+        # Global AGG (Algorithm 1 line 13): uniform average over subgraphs.
+        mean_grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        params, opt_state = opt.update(mean_grads, state["opt_state"],
+                                       state["params"], state["step"])
+
+        if settings.llcg_correction:
+            # LLCG server correction: full-neighbor gradient on a sampled
+            # node mini-batch, plain SGD on the server.
+            key = jax.random.fold_in(jax.random.PRNGKey(17), r)
+            sample = (jax.random.uniform(key, data["full_train_mask"][0]
+                                         .shape)
+                      < settings.correction_frac)
+            corr_mask = data["full_train_mask"][0] & sample
+
+            def server_loss(p):
+                logits, _ = full_graph_forward(cfg, p, data)
+                return softmax_cross_entropy(
+                    logits, data["full_labels"][0],
+                    corr_mask.astype(jnp.float32))
+
+            corr_grads = jax.grad(server_loss)(params)
+            params = jax.tree.map(
+                lambda p, g: p - settings.correction_lr * g, params,
+                corr_grads)
+
+        # Periodic PUSH (lines 9–10): epochs r = 1, N+1, 2N+1, ...
+        new_store = state["store"]
+        eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
+        if settings.mode == "digest" and cfg.num_layers > 1:
+            do_push = ((r - 1) % settings.sync_interval == 0)
+            eps = stale_store.staleness_error(
+                state["store"], push_reps, data["local_ids"],
+                data["local_valid"])
+            new_store = jax.lax.cond(
+                do_push,
+                lambda: stale_store.push(state["store"], data["local_ids"],
+                                         data["local_valid"], push_reps),
+                lambda: state["store"])
+
+        train_acc = micro_f1(logits, data["labels"],
+                             data["train_mask"].astype(jnp.float32))
+        new_state = {"params": params, "opt_state": opt_state,
+                     "store": new_store, "halo_cache": halo_cache,
+                     "epoch": r, "step": state["step"] + 1}
+        metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
+                   "staleness_eps": eps}
+        return new_state, metrics
+
+    return epoch_fn
+
+
+# ---------------------------------------------------------------------------
+# State init + high-level training loop
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0
+               ) -> dict:
+    params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
+    num_nodes = int(data["x_global"].shape[0] - 1)
+    M, H = data["halo_ids"].shape
+    store = stale_store.init_store(max(cfg.num_layers - 1, 1), num_nodes,
+                                   cfg.hidden_dim)
+    return {
+        "params": params,
+        "opt_state": opt.init(params),
+        "store": store,
+        "halo_cache": jnp.zeros((M, max(cfg.num_layers - 1, 1), H,
+                                 cfg.hidden_dim), jnp.float32),
+        "epoch": jnp.asarray(0, jnp.int32),
+        "step": jnp.asarray(0, jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def evaluate(cfg: GNNConfig, params: Pytree, data: dict) -> dict:
+    logits, _ = full_graph_forward(cfg, params, data)
+    out = {}
+    for split in ("train", "val", "test"):
+        mask = data[f"full_{split}_mask"][0].astype(jnp.float32)
+        out[f"{split}_f1"] = micro_f1(logits, data["full_labels"][0], mask)
+        out[f"{split}_loss"] = softmax_cross_entropy(
+            logits, data["full_labels"][0], mask)
+    return out
+
+
+def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
+                 settings: TrainSettings, epochs: int,
+                 eval_every: int = 10, seed: int = 0,
+                 verbose: bool = False) -> tuple[dict, dict]:
+    """Run training; returns (final_state, history dict of lists)."""
+    state = init_state(cfg, opt, data, seed=seed)
+    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings))
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+    hist: dict[str, list] = {"epoch": [], "loss": [], "train_f1": [],
+                             "val_f1": [], "test_f1": [], "time": [],
+                             "staleness_eps": []}
+    t0 = time.perf_counter()
+    for e in range(epochs):
+        state, m = epoch_fn(state, tdata)
+        if (e + 1) % eval_every == 0 or e == epochs - 1:
+            ev = evaluate(cfg, state["params"], tdata)
+            hist["epoch"].append(e + 1)
+            hist["loss"].append(float(m["loss"]))
+            hist["train_f1"].append(float(m["train_f1"]))
+            hist["val_f1"].append(float(ev["val_f1"]))
+            hist["test_f1"].append(float(ev["test_f1"]))
+            hist["staleness_eps"].append(
+                np.asarray(m["staleness_eps"]).tolist())
+            hist["time"].append(time.perf_counter() - t0)
+            if verbose:
+                print(f"[{settings.mode}] epoch {e+1:4d} "
+                      f"loss {float(m['loss']):.4f} "
+                      f"val_f1 {float(ev['val_f1']):.4f}")
+    return state, hist

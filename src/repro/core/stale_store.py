@@ -1,0 +1,70 @@
+"""The stale-representation store — DIGEST's "KVS", TPU-native.
+
+The paper keeps per-node hidden representations in a host shared-memory KVS
+(Plasma).  Our TPU-native equivalent is a global array
+
+    store: (L-1, N+1, hidden)   # row N is the zero sentinel
+
+resident in HBM and shardable node-wise over the mesh "data" axis.  The two
+KVS operations become:
+
+  * ``pull(store, halo_ids)``  → gather of halo rows (an all-gather of remote
+    shards when sharded; node-level parallel I/O is inherent).
+  * ``push(store, local_ids, reps)`` → scatter of locally-owned rows (pure
+    local write under node-wise sharding — the *pull* side pays the wire).
+
+Both are O(|halo| · L · d) per sync — the paper's §3.3 communication terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_store(num_hidden_layers: int, num_nodes: int, hidden: int,
+               dtype=jnp.float32) -> jax.Array:
+    """Zero-initialized store; (L-1, N+1, hidden), sentinel row at N."""
+    return jnp.zeros((num_hidden_layers, num_nodes + 1, hidden), dtype)
+
+
+def pull(store: jax.Array, halo_ids: jax.Array) -> jax.Array:
+    """Gather stale halo tables.
+
+    halo_ids: (M, H) global node ids (sentinel N at padding).
+    Returns (M, L-1, H, hidden).
+    """
+    out = store[:, halo_ids, :]            # (L-1, M, H, hidden)
+    return jnp.swapaxes(out, 0, 1)
+
+
+def push(store: jax.Array, local_ids: jax.Array, local_valid: jax.Array,
+         reps: jax.Array) -> jax.Array:
+    """Scatter fresh local reps into the store.
+
+    local_ids: (M, S); local_valid: (M, S) bool;
+    reps: (M, L-1, S, hidden) — per-subgraph per-layer fresh representations.
+    Invalid (padding) slots are routed to the sentinel row with zero values,
+    and the sentinel row is re-zeroed afterwards, keeping pulls of padded
+    halo slots exactly zero.
+    """
+    n_sentinel = store.shape[1] - 1
+    m, s = local_ids.shape
+    ids = jnp.where(local_valid, local_ids, n_sentinel).reshape(-1)
+    vals = jnp.where(local_valid[:, None, :, None], reps, 0.0)
+    vals = jnp.swapaxes(vals, 0, 1).reshape(store.shape[0], m * s, -1)
+    new = store.at[:, ids, :].set(vals.astype(store.dtype))
+    return new.at[:, n_sentinel, :].set(0.0)
+
+
+def staleness_error(store: jax.Array, fresh: jax.Array,
+                    local_ids: jax.Array, local_valid: jax.Array
+                    ) -> jax.Array:
+    """ε^(ℓ) = max_v ‖h_v^(ℓ) − h̃_v^(ℓ)‖₂ (Theorem 1's per-layer staleness).
+
+    fresh: (M, L-1, S, hidden) this epoch's representations.
+    Returns (L-1,) per-hidden-layer max error.
+    """
+    stale = pull(store, local_ids)          # (M, L-1, S, hidden)
+    diff = jnp.linalg.norm(fresh - stale, axis=-1)     # (M, L-1, S)
+    diff = jnp.where(local_valid[:, None, :], diff, 0.0)
+    return jnp.max(diff, axis=(0, 2))

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLMDataset, TokenBatch,
+                                 make_lm_pipeline)
+
+__all__ = ["SyntheticLMDataset", "TokenBatch", "make_lm_pipeline"]

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (DEFAULT_RULES, axis_rules,
+                                        current_mesh, current_rules,
+                                        logical_constraint, replicated,
+                                        shardings_for_specs, spec_for_axes)
+
+__all__ = ["DEFAULT_RULES", "axis_rules", "current_mesh", "current_rules",
+           "logical_constraint", "replicated", "shardings_for_specs",
+           "spec_for_axes"]

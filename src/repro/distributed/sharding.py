@@ -1,0 +1,159 @@
+"""MaxText-style logical axis rules → mesh shardings.
+
+Models annotate parameters (via ParamSpec.axes) and activations (via
+``logical_constraint``) with *logical* names; a rule table maps logical names
+to mesh axes.  Swapping the rule table is how §Perf iterations change the
+sharding scheme without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# Default rules: megatron-style tensor parallelism on "model", batch over
+# ("pod","data"), FSDP sharding of big params over "data".
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "embed_out": None,
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "expert": "model",
+    "expert_mlp": None,
+    "fsdp": "data",          # applied to the *largest* dim of big params
+    "kv_seq": None,
+    "patches": None,
+    "rnn": "model",
+    "stack": None,           # stacked-layer leading dim
+    "pod_stack": "pod",      # per-pod parameter copies (DIGEST local SGD)
+}
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + logical rule table for model tracing."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _resolve(axes: Sequence[Optional[str]], rules: dict, mesh: Mesh,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """Logical axes tuple → PartitionSpec.
+
+    Drops mesh axes that are absent, already used by an earlier dim, or —
+    when ``shape`` is given — do not divide the dim size (jit boundaries
+    reject uneven shardings; e.g. deepseek's 56 heads on a 16-way model
+    axis fall back to replicated heads, with FSDP still sharding the
+    embed dim)."""
+    used: set[str] = set()
+    spec = []
+    for i, name in enumerate(axes):
+        entry = rules.get(name) if name else None
+        if entry is None:
+            spec.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        keep: list[str] = []
+        size = None if shape is None else int(shape[i])
+        for n in names:
+            if n not in mesh.axis_names or n in used:
+                continue
+            if size is not None and size % (mesh.shape[n]) != 0:
+                continue
+            keep.append(n)
+            used.add(n)
+            if size is not None:
+                size //= mesh.shape[n]
+        if not keep:
+            spec.append(None)
+        elif len(keep) == 1:
+            spec.append(keep[0])
+        else:
+            spec.append(tuple(keep))
+    return P(*spec)
+
+
+def _manual_axes() -> set:
+    """Mesh axes currently under manual (shard_map) control — they must be
+    dropped from auto sharding constraints."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.axis_names:
+            return set()
+        return {n for n, t in zip(am.axis_names, am.axis_types)
+                if "Manual" in str(t)}
+    except Exception:
+        return set()
+
+
+def logical_constraint(x: jax.Array,
+                       axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = current_mesh()
+    rules = current_rules()
+    if mesh is None or rules is None or len(mesh.axis_names) == 0:
+        return x
+    manual = _manual_axes()
+    if manual:
+        rules = {k: (tuple(a for a in v if a not in manual)
+                     if isinstance(v, tuple)
+                     else (None if v in manual else v))
+                 for k, v in rules.items()}
+    spec = _resolve(axes, rules, mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def spec_for_axes(axes: Sequence[Optional[str]], mesh: Mesh,
+                  rules: Optional[dict] = None,
+                  shape: Optional[Sequence[int]] = None) -> P:
+    return _resolve(axes, dict(DEFAULT_RULES, **(rules or {})), mesh, shape)
+
+
+def shardings_for_specs(specs_tree: Pytree, mesh: Mesh,
+                        rules: Optional[dict] = None,
+                        extra_leading: tuple = ()) -> Pytree:
+    """NamedSharding pytree from a ParamSpec pytree (shape-aware).
+
+    ``extra_leading`` prepends (logical_axis_name, dim_size) pairs — e.g.
+    (("pod_stack", 2),) for the local-SGD per-pod parameter copies."""
+    from repro.nn.params import ParamSpec, is_spec
+    merged = dict(DEFAULT_RULES, **(rules or {}))
+    lead_axes = tuple(a for a, _ in extra_leading)
+    lead_shape = tuple(s for _, s in extra_leading)
+
+    def leaf(spec: ParamSpec):
+        axes = lead_axes + tuple(spec.axes)
+        shape = lead_shape + tuple(spec.shape)
+        return NamedSharding(mesh, _resolve(axes, merged, mesh, shape))
+
+    return jax.tree.map(leaf, specs_tree, is_leaf=is_spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,7 @@
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+from repro.kernels.flash_attention.ops import multi_head_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention_ref", "flash_attention_pallas",
+           "multi_head_attention"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  sm_scale: float | None = None) -> jax.Array:
+    """q, k, v: (bh, seq, head_dim). Dense softmax(QKᵀ)V oracle."""
+    bh, seq, hd = q.shape
+    if sm_scale is None:
+        sm_scale = hd ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,6 @@
+from repro.kernels.gat_edge.gat_edge import gat_edge_partial_pallas
+from repro.kernels.gat_edge.ops import gat_aggregate
+from repro.kernels.gat_edge.ref import gat_edge_partial_ref, merge_partials
+
+__all__ = ["gat_aggregate", "gat_edge_partial_pallas",
+           "gat_edge_partial_ref", "merge_partials"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused GAT edge-softmax partial."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+LEAKY_SLOPE = 0.2
+
+
+def gat_edge_partial_ref(nbr: jax.Array, valid: jax.Array,
+                         s_dst: jax.Array, s_src: jax.Array,
+                         z: jax.Array
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Dense oracle. Shapes as in gat_edge_partial_pallas."""
+    sv = jnp.take(s_src.astype(jnp.float32), nbr, axis=0)   # (rows, deg)
+    e = s_dst.astype(jnp.float32)[:, None] + sv
+    e = jnp.where(e >= 0, e, LEAKY_SLOPE * e)
+    e = jnp.where(valid, e, NEG_INF)
+    m = jnp.max(e, axis=1)                                  # (rows,)
+    p = jnp.exp(e - m[:, None]) * valid                     # (rows, deg)
+    l = jnp.sum(p, axis=1)
+    rows = jnp.take(z.astype(jnp.float32), nbr, axis=0)     # (rows,deg,f)
+    acc = jnp.einsum("rd,rdf->rf", p, rows)
+    return acc, m, l
+
+
+def merge_partials(parts: list[tuple[jax.Array, jax.Array, jax.Array]]
+                   ) -> jax.Array:
+    """Merge online-softmax partials from several edge sets (e.g. DIGEST's
+    in-subgraph + stale out-of-subgraph) and normalize."""
+    acc, m, l = parts[0]
+    for acc2, m2, l2 in parts[1:]:
+        m_new = jnp.maximum(m, m2)
+        c1 = jnp.exp(m - m_new)
+        c2 = jnp.exp(m2 - m_new)
+        acc = c1[:, None] * acc + c2[:, None] * acc2
+        l = c1 * l + c2 * l2
+        m = m_new
+    return acc / jnp.maximum(l, 1e-16)[:, None]

@@ -1,0 +1,5 @@
+from repro.kernels.spmm.ops import spmm
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.spmm.spmm import spmm_pallas
+
+__all__ = ["spmm", "spmm_ref", "spmm_pallas"]

@@ -1,0 +1,48 @@
+"""Jitted public entry point for neighbor aggregation.
+
+Dispatch: ``backend="auto"`` uses the Pallas kernel on TPU and the pure-jnp
+reference on CPU (interpret-mode Pallas is Python-slow; the oracle is the
+same math).  Tests pin ``backend="pallas_interpret"`` to validate the kernel
+body itself.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.spmm.spmm import spmm_pallas
+
+
+def _pad_dim(x: jax.Array, axis: int, multiple: int,
+             value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def spmm(nbr: jax.Array, wts: jax.Array, table: jax.Array,
+         backend: str = "auto") -> jax.Array:
+    """Neighbor aggregation out[i] = Σ_k wts[i,k]·table[nbr[i,k]].
+
+    Handles arbitrary (unpadded) shapes by padding to kernel block sizes.
+    """
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if backend == "jnp":
+        return spmm_ref(nbr, wts, table)
+
+    interpret = backend != "pallas"
+    rows, feat = nbr.shape[0], table.shape[1]
+    nbr_p = _pad_dim(nbr, 0, 128, value=table.shape[0] - 1)
+    wts_p = _pad_dim(wts, 0, 128, value=0)
+    tab_p = _pad_dim(table, 1, 128, value=0)
+    out = spmm_pallas(nbr_p, wts_p, tab_p, interpret=interpret)
+    return out[:rows, :feat]

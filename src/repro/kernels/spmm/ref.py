@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the ELL SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(nbr: jax.Array, wts: jax.Array, table: jax.Array) -> jax.Array:
+    """out[i] = sum_k wts[i,k] * table[nbr[i,k]] — vectorized gather form."""
+    gathered = jnp.take(table, nbr, axis=0)        # (rows, deg, feat)
+    w = wts.astype(jnp.float32)[..., None]
+    return jnp.sum(w * gathered.astype(jnp.float32), axis=1)

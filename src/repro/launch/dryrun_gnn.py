@@ -1,0 +1,162 @@
+"""GNN dry-run: DIGEST's own workload (Algorithm 1) lowered on the
+production mesh — M=256 subgraphs of a large synthetic graph, one per chip
+on the "data" axis, stale store sharded node-wise.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_gnn [--multi-pod]
+
+Run as its own process (512 placeholder devices).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import TrainSettings, make_epoch_fn
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                               make_production_mesh)
+from repro.models.gnn import GNNConfig, gnn_specs
+from repro.nn import abstract_params, param_axes
+from repro.optim import adam
+
+
+def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
+                      hidden: int, classes: int, deg_in: int, deg_out: int,
+                      halo_frac: float):
+    """ShapeDtypeStruct stand-ins for a partitioned graph (no host build —
+    at 256 parts × 1M nodes the partitioner would dominate; shapes are what
+    the compiler needs)."""
+    S = num_nodes // num_parts
+    H = int(S * halo_frac)
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    # Node tables carry the sentinel row; pad row count to shard evenly.
+    rows = ((num_nodes + 1 + num_parts - 1) // num_parts) * num_parts
+    data = {
+        "x_global": sds((rows, feat), f32),
+        "struct": {"in_nbr": sds((num_parts, S, deg_in), i32),
+                   "in_wts": sds((num_parts, S, deg_in), f32),
+                   "out_nbr": sds((num_parts, S, deg_out), i32),
+                   "out_wts": sds((num_parts, S, deg_out), f32)},
+        "local_ids": sds((num_parts, S), i32),
+        "local_valid": sds((num_parts, S), jnp.bool_),
+        "halo_ids": sds((num_parts, H), i32),
+        "labels": sds((num_parts, S), i32),
+        "train_mask": sds((num_parts, S), jnp.bool_),
+        "val_mask": sds((num_parts, S), jnp.bool_),
+        "test_mask": sds((num_parts, S), jnp.bool_),
+        # full-graph view (eval only; not used by the epoch fn)
+        "full_struct": {"in_nbr": sds((1, 8, 1), i32),
+                        "in_wts": sds((1, 8, 1), f32),
+                        "out_nbr": sds((1, 8, 1), i32),
+                        "out_wts": sds((1, 8, 1), f32)},
+        "full_ids": sds((1, 8), i32),
+        "full_valid": sds((1, 8), jnp.bool_),
+        "full_labels": sds((1, 8), i32),
+        "full_train_mask": sds((1, 8), jnp.bool_),
+        "full_val_mask": sds((1, 8), jnp.bool_),
+        "full_test_mask": sds((1, 8), jnp.bool_),
+    }
+    return data, S, H, rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--nodes", type=int, default=1_048_576)
+    ap.add_argument("--feat", type=int, default=128)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--deg", type=int, default=16)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    data_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    num_parts = 1
+    for a in data_axes:
+        num_parts *= mesh.shape[a]
+
+    cfg = GNNConfig(model="gcn", num_layers=3, in_dim=args.feat,
+                    hidden_dim=args.hidden, num_classes=64)
+    opt = adam(5e-3)
+    settings = TrainSettings(sync_interval=10, mode="digest")
+    data, S, H, rows = abstract_gnn_case(args.nodes, num_parts, args.feat,
+                                         args.hidden, 64, args.deg,
+                                         args.deg // 2, halo_frac=1.0)
+
+    rep = NamedSharding(mesh, P())
+    mdim = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    m_shard = NamedSharding(mesh, P(mdim))
+    node_shard = NamedSharding(mesh, P(mdim))
+
+    specs = gnn_specs(cfg)
+    params_abs = abstract_params(specs)
+    state_abs = {
+        "params": params_abs,
+        "opt_state": jax.eval_shape(opt.init, params_abs),
+        "store": jax.ShapeDtypeStruct(
+            (cfg.num_layers - 1, rows, args.hidden), jnp.float32),
+        "halo_cache": jax.ShapeDtypeStruct(
+            (num_parts, cfg.num_layers - 1, H, args.hidden), jnp.float32),
+        "epoch": jax.ShapeDtypeStruct((), jnp.int32),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_sh = {
+        "params": jax.tree.map(lambda _: rep, params_abs),
+        "opt_state": jax.tree.map(lambda _: rep,
+                                  state_abs["opt_state"]),
+        "store": NamedSharding(mesh, P(None, mdim, None)),
+        "halo_cache": m_shard, "epoch": rep, "step": rep,
+    }
+    data_sh = {}
+    for k, v in data.items():
+        if k == "x_global":
+            data_sh[k] = NamedSharding(mesh, P(mdim, None))
+        elif k == "struct":
+            data_sh[k] = {kk: m_shard for kk in v}
+        elif k.startswith("full_"):
+            data_sh[k] = jax.tree.map(lambda _: rep, v)
+        else:
+            data_sh[k] = m_shard
+
+    epoch_fn = make_epoch_fn(cfg, opt, settings)
+    t0 = time.perf_counter()
+    lowered = jax.jit(epoch_fn, in_shardings=(state_sh, data_sh)).lower(
+        state_abs, data)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    out = {
+        "case": "digest_gnn_epoch",
+        "mesh": "2x16x16" if args.multi_pod else "16x16",
+        "nodes": args.nodes, "parts": num_parts, "S": S, "H": H,
+        "hidden": args.hidden,
+        "hlo_flops": float(cost.get("flops", 0.0)),
+        "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total"],
+        "collective_per_op": coll["per_op"],
+        "compute_term_s": float(cost.get("flops", 0.0)) / PEAK_FLOPS,
+        "memory_term_s": float(cost.get("bytes accessed", 0.0)) / HBM_BW,
+        "collective_term_s": coll["total"] / ICI_BW,
+        "t_compile_s": round(time.perf_counter() - t0, 2),
+    }
+    if mem is not None:
+        out["mem_temp_gb"] = round(mem.temp_size_in_bytes / 1e9, 3)
+        out["mem_arg_gb"] = round(mem.argument_size_in_bytes / 1e9, 3)
+    line = json.dumps(out)
+    print(line)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Input/state ShapeDtypeStruct stand-ins and shardings for the dry-run.
+
+``input_specs(cfg, shape_name)`` follows the assignment's four shapes:
+
+    train_4k       seq=4096    global_batch=256   (training)
+    prefill_32k    seq=32768   global_batch=32    (inference-prefill)
+    decode_32k     seq=32768   global_batch=128   (decode: 1 token + cache)
+    long_500k      seq=524288  global_batch=1     (long-context decode,
+                                                   stale-KV / recurrent)
+
+Modality stubs: VLM shapes add precomputed patch embeddings; musicgen's
+tokens *are* the EnCodec frame codes (vocab 2048).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ArchConfig, arch_specs, cache_specs
+from repro.nn.params import ParamSpec, is_spec
+from repro.optim import Optimizer
+
+Pytree = Any
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode_long"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Abstract model inputs for one assignment shape (no allocation)."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    out: dict[str, Any] = {}
+    if kind == "train":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+        out["mask"] = _sds((b, s), jnp.float32)
+    elif kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32)
+    else:  # decode / decode_long — ONE new token
+        out["tokens"] = _sds((b, 1), jnp.int32)
+    if cfg.vision_dim and kind in ("train", "prefill"):
+        out["vision"] = _sds((b, cfg.num_patches, cfg.vision_dim),
+                             jnp.bfloat16)
+    return out
+
+
+def batch_logical_axes(cfg: ArchConfig, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    tok = ("batch", "seq")
+    out = {"tokens": tok}
+    if kind == "train":
+        out["labels"] = tok
+        out["mask"] = tok
+    if cfg.vision_dim and kind in ("train", "prefill"):
+        out["vision"] = ("batch", "patches", None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state specs (mirrors repro.optim structures, for shardings)
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(opt_name: str, param_specs: Pytree) -> Pytree:
+    """Mirrors the *actual* state structure of repro.optim optimizers."""
+    f32 = jnp.float32
+
+    def like(spec: ParamSpec):
+        return ParamSpec(spec.shape, spec.axes, init="zeros", dtype=f32)
+
+    if opt_name in ("adam", "adamw"):
+        return {"m": jax.tree.map(like, param_specs, is_leaf=is_spec),
+                "v": jax.tree.map(like, param_specs, is_leaf=is_spec)}
+    if opt_name == "adafactor":
+        def leaf(spec: ParamSpec):
+            if len(spec.shape) >= 2:
+                row = ParamSpec(spec.shape[:-1], spec.axes[:-1],
+                                init="zeros", dtype=f32)
+                col = ParamSpec(spec.shape[:-2] + spec.shape[-1:],
+                                spec.axes[:-2] + spec.axes[-1:],
+                                init="zeros", dtype=f32)
+                return {"row": row, "col": col}
+            return {"v": like(spec)}
+        return jax.tree.map(leaf, param_specs, is_leaf=is_spec)
+    if opt_name == "sgd":
+        return ()
+    raise ValueError(opt_name)
+
+
+def train_state_specs(cfg: ArchConfig, n_pod: int = 1,
+                      digest_pods: bool = False) -> dict:
+    """ParamSpec pytree for the full train state (params + opt + step)."""
+    from repro.models.transformer import _stack_spec  # shared helper
+    p_specs = arch_specs(cfg)
+    o_specs = opt_state_specs(cfg.optimizer, p_specs)
+    if digest_pods and n_pod > 1:
+        stack = lambda t: jax.tree.map(
+            lambda s: dataclasses.replace(
+                _stack_spec(s, n_pod),
+                axes=("pod_stack",) + s.axes), t, is_leaf=is_spec)
+        p_specs = stack(p_specs)
+        o_specs = stack(o_specs)
+    return {"params": p_specs, "opt_state": o_specs,
+            "step": ParamSpec((), (), init="zeros", dtype=jnp.int32)}
+
+
+def abstract_from_specs(specs: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: _sds(s.shape, s.dtype), specs,
+                        is_leaf=is_spec)
+
+
+def serve_state_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    long = sh["kind"] == "decode_long"
+    return {"params": arch_specs(cfg),
+            "cache": cache_specs(cfg, sh["batch"], sh["seq"], long=long)}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""SPMD DIGEST GNN training launcher.
+
+The DIGEST epoch function is written over stacked (M, ...) subgraph arrays;
+under pjit we shard that leading M axis over the mesh "data" axis — one
+subgraph per device slice, which *is* Algorithm 1's `for m in parallel`.
+On CPU (1 device) the same program runs vmapped; on a fleet, identical code.
+
+  PYTHONPATH=src python -m repro.launch.train_gnn --dataset flickr-sim \
+      --parts 4 --epochs 40
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import TrainSettings, evaluate, init_state, make_epoch_fn, \
+    prepare_graph_data
+from repro.graph import make_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+
+def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
+    """Shard every stacked (M, ...) array over 'data'; the stale store is
+    sharded node-wise; params/opt replicated (GNN weights are tiny)."""
+    rep = NamedSharding(mesh, P())
+    m_shard = NamedSharding(mesh, P("data"))
+
+    def data_leaf(path, x):
+        key = path[0].key if hasattr(path[0], "key") else str(path[0])
+        if key in ("x_global",):
+            return rep
+        if key.startswith("full_"):
+            return rep
+        return m_shard if np.ndim(x) >= 1 else rep
+
+    data_sh = {}
+    for k, v in data.items():
+        if k.startswith("_"):
+            continue
+        if k in ("x_global",) or k.startswith("full_"):
+            data_sh[k] = jax.tree.map(lambda _: rep, v)
+        elif k == "struct":
+            data_sh[k] = {kk: m_shard for kk in v}
+        else:
+            data_sh[k] = m_shard
+    state_sh = {
+        "params": jax.tree.map(lambda _: rep, state["params"]),
+        "opt_state": jax.tree.map(lambda _: rep, state["opt_state"]),
+        "store": NamedSharding(mesh, P(None, "data", None)),
+        "halo_cache": m_shard,
+        "epoch": rep, "step": rep,
+    }
+    return data_sh, state_sh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="flickr-sim")
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--model", default="gcn")
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--interval", type=int, default=10)
+    ap.add_argument("--data-axis", type=int, default=1,
+                    help="mesh data-axis size (1 on CPU)")
+    args = ap.parse_args()
+
+    g = make_dataset(args.dataset, scale=args.scale)
+    data = prepare_graph_data(g, args.parts)
+    cfg = GNNConfig(model=args.model, num_layers=3,
+                    in_dim=g.features.shape[1], hidden_dim=64,
+                    num_classes=int(g.labels.max()) + 1)
+    opt = adam(5e-3)
+    settings = TrainSettings(sync_interval=args.interval, mode="digest")
+    mesh = make_host_mesh(data=args.data_axis, model=1)
+
+    state = init_state(cfg, opt, data)
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+    data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
+    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings),
+                       in_shardings=(state_sh, data_sh))
+    t0 = time.perf_counter()
+    for e in range(args.epochs):
+        state, m = epoch_fn(state, tdata)
+    ev = evaluate(cfg, state["params"], tdata)
+    print(f"mesh={dict(mesh.shape)} epochs={args.epochs} "
+          f"loss={float(m['loss']):.4f} val_f1={float(ev['val_f1']):.4f} "
+          f"({(time.perf_counter()-t0)/args.epochs:.3f}s/epoch)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.gnn import GNNConfig, gnn_forward, gnn_specs
+
+__all__ = ["GNNConfig", "gnn_forward", "gnn_specs"]

@@ -1,0 +1,149 @@
+"""Attention for the assigned architectures: GQA + RoPE + qk-norm, full /
+sliding-window / chunked (flash-style) variants, KV-cache decode, and
+cross-attention (VLM).
+
+Backend policy:
+  * TPU prefill → Pallas flash kernel (repro.kernels.flash_attention).
+  * CPU / dry-run lowering → ``chunked_attention``: a lax.scan over KV
+    chunks with online softmax — the same O(S) memory behaviour as flash,
+    so the roofline's memory term reflects the real kernel, not a dense
+    S² materialization.
+  * decode (1 token) → plain einsum over the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.kernels.flash_attention import multi_head_attention
+from repro.nn import apply_rope
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, rep: int) -> jax.Array:
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool = True, window: int = 0,
+                      chunk: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """Flash-style attention as a scan over KV chunks (pure jnp).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D). ``window`` > 0 limits attention
+    to the last `window` positions (sliding window). ``q_offset`` is the
+    absolute position of q[0] (for decode/cross-block use).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = d ** -0.5
+    chunk = min(chunk, sk)
+    if sk % chunk:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk_pad = sk + pad
+    else:
+        sk_pad = sk
+    n_chunks = sk_pad // chunk
+
+    kc = k.reshape(b, n_chunks, chunk, kv, d)
+    vc = v.reshape(b, n_chunks, chunk, kv, d)
+    # Keep K/V in their storage dtype end to end and fuse the f32 upcast
+    # into the matmuls (preferred_element_type): an explicit .astype(f32)
+    # inside the scan gets hoisted by XLA into a full-size f32 buffer,
+    # doubling the gather/HBM volume when the stream is sharded.
+    q_s = (q * scale).astype(q.dtype)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kci, vci, ci = inputs
+        kci = repeat_kv(kci, rep)                       # (B, C, H, D)
+        vci = repeat_kv(vci, rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_s, kci,
+                       preferred_element_type=jnp.float32)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < sk                       # in-bounds
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, h, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+                     jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)      # (B, Sq, H, D)
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, window: int = 0, backend: str = "auto",
+                      chunk: int = 1024) -> jax.Array:
+    """Training/prefill attention with backend dispatch."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "chunked"
+    if backend == "pallas" and window == 0:
+        return multi_head_attention(q, k, v, causal=True, backend="pallas")
+    if backend == "dense" and window == 0:
+        return multi_head_attention(q, k, v, causal=True, backend="jnp")
+    return chunked_attention(q, k, v, causal=True, window=window,
+                             chunk=chunk)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token decode: q (B, 1, H, D) vs cache (B, S, KV, D).
+
+    ``pos`` is the index of the new token (cache entries > pos are invalid).
+    """
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    scale = d ** -0.5
+    q32 = q[:, 0].astype(jnp.float32) * scale            # (B, H, D)
+    kf = repeat_kv(k_cache, rep).astype(jnp.float32)     # (B, S, H, D)
+    vf = repeat_kv(v_cache, rep).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bshd->bhs", q32, kf)
+    k_pos = jnp.arange(s)
+    mask = k_pos[None, :] <= pos[:, None]                # (B, S)
+    if window > 0:
+        mask = mask & (pos[:, None] - k_pos[None, :] < window)
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out[:, None].astype(q.dtype)                  # (B, 1, H, D)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Text-to-vision cross attention (no mask). q: (B,S,H,D);
+    k, v: (B,P,KV,D)."""
+    rep = q.shape[2] // k.shape[2]
+    kf = repeat_kv(k, rep).astype(jnp.float32)
+    vf = repeat_kv(v, rep).astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,196 @@
+"""GNN models (GCN / GraphSAGE / GAT) in DIGEST's split-aggregation form.
+
+Every layer implements Eq. 4/5 of the paper: the aggregation over neighbors
+is split into an **in-subgraph** ELL product (fresh representations) and an
+**out-of-subgraph** ELL product against whatever halo table the caller
+supplies — fresh features (layer 0), *stale* representations (DIGEST),
+zeros (partition-based baseline), or fresh remote reps (propagation-based
+baseline).  The trainer chooses the table; the model is agnostic, which is
+exactly what makes the baseline frameworks share 95% of the code path.
+
+Shapes (single subgraph):
+  x_local   (S, d)      padded local node features/reps
+  x_halo    (H, d)      halo table for this layer's input
+  in_nbr    (S, Din)    local slot ids, sentinel == S
+  out_nbr   (S, Dout)   halo slot ids, sentinel == H
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm import spmm
+from repro.nn import ParamSpec, dense
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    model: str = "gcn"            # gcn | sage | gat
+    num_layers: int = 3
+    in_dim: int = 64
+    hidden_dim: int = 128
+    num_classes: int = 8
+    heads: int = 4                # GAT only
+    normalize: bool = True        # Algorithm 1 line 11 (L2 per node)
+    residual: bool = False
+    backend: str = "jnp"          # aggregation backend (jnp | pallas*)
+
+    @property
+    def layer_dims(self) -> list[tuple[int, int]]:
+        dims = []
+        for ell in range(self.num_layers):
+            din = self.in_dim if ell == 0 else self.hidden_dim
+            dout = (self.num_classes if ell == self.num_layers - 1
+                    else self.hidden_dim)
+            dims.append((din, dout))
+        return dims
+
+
+def _pad_sentinel(x: jax.Array) -> jax.Array:
+    """Append the zero sentinel row the ELL kernels gather for padding."""
+    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def gnn_specs(cfg: GNNConfig) -> Pytree:
+    specs: dict[str, Any] = {}
+    for ell, (din, dout) in enumerate(cfg.layer_dims):
+        layer: dict[str, Any] = {}
+        if cfg.model == "gcn":
+            layer["w"] = ParamSpec((din, dout), ("embed", "embed_out"))
+            layer["b"] = ParamSpec((dout,), ("embed_out",), init="zeros")
+        elif cfg.model == "sage":
+            layer["w_self"] = ParamSpec((din, dout), ("embed", "embed_out"))
+            layer["w_nbr"] = ParamSpec((din, dout), ("embed", "embed_out"))
+            layer["b"] = ParamSpec((dout,), ("embed_out",), init="zeros")
+        elif cfg.model == "gat":
+            heads = cfg.heads if ell < cfg.num_layers - 1 else 1
+            if dout % heads:
+                raise ValueError(f"layer {ell}: dout {dout} % heads {heads}")
+            dh = dout // heads
+            layer["w"] = ParamSpec((din, heads, dh),
+                                   ("embed", "heads", "head_dim"),
+                                   fan_in_dims=(0,))
+            layer["a_src"] = ParamSpec((heads, dh), ("heads", "head_dim"),
+                                       init="normal")
+            layer["a_dst"] = ParamSpec((heads, dh), ("heads", "head_dim"),
+                                       init="normal")
+            layer["b"] = ParamSpec((dout,), ("embed_out",), init="zeros")
+        else:
+            raise ValueError(cfg.model)
+        specs[f"layer_{ell}"] = layer
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _gcn_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
+    agg = spmm(struct["in_nbr"], struct["in_wts"], _pad_sentinel(x_local),
+               backend=cfg.backend)
+    agg = agg + spmm(struct["out_nbr"], struct["out_wts"],
+                     _pad_sentinel(x_halo), backend=cfg.backend)
+    return dense(agg, p["w"], p["b"])
+
+
+def _sage_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
+    # Mean aggregator: row-normalize the (GCN) weights to a mean.
+    in_w, out_w = struct["in_wts"], struct["out_wts"]
+    denom = jnp.sum(in_w, axis=1, keepdims=True) + jnp.sum(
+        out_w, axis=1, keepdims=True)
+    denom = jnp.maximum(denom, 1e-12)
+    agg = spmm(struct["in_nbr"], in_w / denom, _pad_sentinel(x_local),
+               backend=cfg.backend)
+    agg = agg + spmm(struct["out_nbr"], out_w / denom,
+                     _pad_sentinel(x_halo), backend=cfg.backend)
+    return (dense(x_local, p["w_self"]) + dense(agg, p["w_nbr"]) + p["b"])
+
+
+def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
+    S = x_local.shape[0]
+    H = x_halo.shape[0]
+    heads, dh = p["a_src"].shape
+    z_loc = jnp.einsum("sd,dhk->shk", x_local, p["w"])    # (S, heads, dh)
+    z_out = jnp.einsum("sd,dhk->shk", x_halo, p["w"])     # (H, heads, dh)
+
+    s_dst = jnp.einsum("shk,hk->sh", z_loc, p["a_dst"])   # (S, heads)
+    src_loc = jnp.einsum("shk,hk->sh", z_loc, p["a_src"])  # (S, heads)
+    src_out = jnp.einsum("shk,hk->sh", z_out, p["a_src"])  # (H, heads)
+
+    def _scores(nbr, src_table, n_cols):
+        pad = jnp.concatenate([src_table,
+                               jnp.zeros((1, heads), src_table.dtype)], 0)
+        s_src = jnp.take(pad, nbr, axis=0)                 # (S, D, heads)
+        e = jax.nn.leaky_relu(s_dst[:, None, :] + s_src, 0.2)
+        valid = (nbr < n_cols)[..., None]
+        return jnp.where(valid, e, -1e30), valid
+
+    e_in, v_in = _scores(struct["in_nbr"], src_loc, S)
+    e_out, v_out = _scores(struct["out_nbr"], src_out, H)
+
+    m = jnp.maximum(jnp.max(e_in, axis=1), jnp.max(e_out, axis=1))
+    m = jax.lax.stop_gradient(m)                           # (S, heads)
+    p_in = jnp.exp(e_in - m[:, None, :]) * v_in
+    p_out = jnp.exp(e_out - m[:, None, :]) * v_out
+    denom = (jnp.sum(p_in, axis=1) + jnp.sum(p_out, axis=1) + 1e-16)
+    a_in = p_in / denom[:, None, :]                        # (S, Din, heads)
+    a_out = p_out / denom[:, None, :]
+
+    outs = []
+    for h in range(heads):
+        o = spmm(struct["in_nbr"], a_in[..., h],
+                 _pad_sentinel(z_loc[:, h]), backend=cfg.backend)
+        o = o + spmm(struct["out_nbr"], a_out[..., h],
+                     _pad_sentinel(z_out[:, h]), backend=cfg.backend)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=-1) + p["b"]
+
+
+_LAYERS = {"gcn": _gcn_layer, "sage": _sage_layer, "gat": _gat_layer}
+
+
+# ---------------------------------------------------------------------------
+# Full forward (single subgraph)
+# ---------------------------------------------------------------------------
+
+def gnn_forward(cfg: GNNConfig, params: Pytree, x_local: jax.Array,
+                halo_tables: list[jax.Array], struct: dict,
+                ) -> tuple[jax.Array, list[jax.Array]]:
+    """Run the L-layer GNN on one subgraph.
+
+    Args:
+      x_local: (S, in_dim) local node features.
+      halo_tables: per-layer halo input tables; halo_tables[ℓ] feeds layer ℓ
+        (ℓ=0 is raw halo features; ℓ≥1 are stale hidden reps of width
+        hidden_dim — this is the DIGEST pull result).
+      struct: ELL adjacency dict (in_nbr/in_wts/out_nbr/out_wts).
+    Returns:
+      (logits (S, num_classes), reps) where reps[ℓ] is the layer-(ℓ+1) input
+      representation this subgraph would *push* to the stale store
+      (post-activation, post-normalization hidden states, ℓ = 0..L-2).
+    """
+    layer_fn = _LAYERS[cfg.model]
+    h = x_local
+    push: list[jax.Array] = []
+    for ell in range(cfg.num_layers):
+        p = params[f"layer_{ell}"]
+        out = layer_fn(cfg, p, h, halo_tables[ell], struct)
+        if ell < cfg.num_layers - 1:
+            out = jax.nn.relu(out)
+            if cfg.normalize:   # Algorithm 1 line 11
+                out = out / jnp.maximum(
+                    jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-12)
+            if cfg.residual and out.shape == h.shape:
+                out = out + h
+            push.append(out)
+        h = out
+    return h, push

@@ -1,0 +1,169 @@
+"""Recurrent sequence blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM
+(mLSTM + sLSTM).
+
+All three expose a *training* form over (B, S, ...) and a *decode* form
+(single step + carried state), which is what makes ``long_500k`` native for
+these families (O(1) state instead of a 524k KV cache).
+
+Training parallelization:
+  * RG-LRU: ``jax.lax.associative_scan`` over the sequence (log-depth).
+  * mLSTM: parallel quadratic form with stabilized exponential gating
+    (xLSTM paper, Eq. 19-27).
+  * sLSTM: genuinely sequential (hidden-to-hidden recurrence) →
+    ``jax.lax.scan``; xLSTM-1.3b places it in 1 of 8 blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+C_RGLRU = 8.0
+
+
+def rg_lru(x: jax.Array, gate_x: jax.Array, gate_a: jax.Array,
+           log_lambda: jax.Array,
+           h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Real-Gated LRU scan.
+
+    x, gate_x, gate_a: (B, S, D) — input branch and the two gate
+    pre-activations; log_lambda: (D,) learned decay parameter.
+    Returns (y (B,S,D), h_last (B,D)).
+    """
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(log_lambda.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                   # (B, S, D)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i * x.astype(jnp.float32))
+
+    if h0 is not None:
+        # Fold the carried state into the first step.
+        first = a[:, :1] * h0[:, None] + gated[:, :1]
+        gated = jnp.concatenate([first, gated[:, 1:]], axis=1)
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a[:, 1:]], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(x: jax.Array, gate_x: jax.Array, gate_a: jax.Array,
+                log_lambda: jax.Array, h: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """One decode step; x, gates: (B, D); h: (B, D) carried state."""
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(log_lambda.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-9)) \
+        * (i * x.astype(jnp.float32))
+    return h_new.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, parallel training form)
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
+                   i_pre: jax.Array, f_pre: jax.Array) -> jax.Array:
+    """q, k, v: (B, H, S, D); i_pre, f_pre: (B, H, S) gate pre-activations.
+
+    Stabilized parallel form (xLSTM Eq. 19-27).
+    """
+    b, h, s, d = q.shape
+    f32 = jnp.float32
+    logf = jax.nn.log_sigmoid(f_pre.astype(f32))         # (B, H, S)
+    csum = jnp.cumsum(logf, axis=-1)
+    # D̃_ij = Σ_{t=j+1}^{i} log f_t + ĩ_j  (j ≤ i)
+    dtil = csum[..., :, None] - csum[..., None, :] + \
+        i_pre.astype(f32)[..., None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dtil = jnp.where(causal, dtil, -jnp.inf)
+    m = jnp.max(dtil, axis=-1)                            # (B, H, S)
+    dmat = jnp.exp(dtil - m[..., None])
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(f32),
+                        k.astype(f32)) * (d ** -0.5)
+    c = scores * dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(c, axis=-1)), jnp.exp(-m))
+    out = jnp.einsum("bhst,bhtd->bhsd", c, v.astype(f32)) \
+        / jnp.maximum(norm, 1e-12)[..., None]
+    return out.astype(q.dtype)
+
+
+def mlstm_step(q: jax.Array, k: jax.Array, v: jax.Array,
+               i_pre: jax.Array, f_pre: jax.Array,
+               state: dict) -> tuple[jax.Array, dict]:
+    """One decode step. q,k,v: (B,H,D); i_pre,f_pre: (B,H);
+    state: {C (B,H,D,D), n (B,H,D), m (B,H)}."""
+    f32 = jnp.float32
+    d = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_pre.astype(f32))
+    m_new = jnp.maximum(logf + state["m"], i_pre.astype(f32))
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    i_s = jnp.exp(i_pre.astype(f32) - m_new)
+    kf = k.astype(f32) * (d ** -0.5)
+    C = f_s[..., None, None] * state["C"] + \
+        i_s[..., None, None] * jnp.einsum("bhd,bhe->bhde", vf(v), kf)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * kf
+    num = jnp.einsum("bhde,bhe->bhd", C, q.astype(f32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                                         q.astype(f32))), jnp.exp(-m_new))
+    out = num / jnp.maximum(den, 1e-12)[..., None]
+    return out.astype(q.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def vf(v: jax.Array) -> jax.Array:
+    return v.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(wx: jax.Array, r_weights: dict,
+               state: dict | None = None
+               ) -> tuple[jax.Array, dict]:
+    """Sequential sLSTM over a sequence.
+
+    wx: dict-free packed input pre-activations (B, S, H, 4, D) for gates
+    (z, i, f, o); r_weights: per-gate recurrent matrices {gate: (H, D, D)}.
+    Returns (h (B,S,H,D), final state {c,n,m,h}).
+    """
+    b, s, h, _, d = wx.shape
+    f32 = jnp.float32
+    if state is None:
+        zero = jnp.zeros((b, h, d), f32)
+        state = {"c": zero, "n": zero, "h": zero,
+                 "m": jnp.zeros((b, h, d), f32)}
+
+    rz, ri, rf, ro = (r_weights["z"], r_weights["i"], r_weights["f"],
+                      r_weights["o"])
+
+    def step(carry, x_t):
+        c, n, m, h_prev = carry["c"], carry["n"], carry["m"], carry["h"]
+        rec = lambda r: jnp.einsum("bhd,hde->bhe", h_prev, r.astype(f32))
+        z = jnp.tanh(x_t[:, :, 0].astype(f32) + rec(rz))
+        i_pre = x_t[:, :, 1].astype(f32) + rec(ri)
+        f_pre = x_t[:, :, 2].astype(f32) + rec(rf)
+        o = jax.nn.sigmoid(x_t[:, :, 3].astype(f32) + rec(ro))
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-12)
+        carry = {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+        return carry, h_new
+
+    carry, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(wx.dtype), carry

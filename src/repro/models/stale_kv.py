@@ -1,0 +1,168 @@
+"""Stale-KV block attention — DIGEST's mechanism applied to long context.
+
+A token attending over a 524k-token history is the transformer analogue of
+a GNN node aggregating over a huge neighborhood.  Following Eq. 4 of the
+paper we split the "neighbors":
+
+  * in-subgraph  → the local window (last W positions): attended exactly,
+    from a ring-buffer KV cache.
+  * out-of-subgraph → everything older: attended through a **stale summary
+    table** (mean-pooled KV per R-token block) that is only updated
+    ("pushed") once per R decode steps — periodic stale synchronization.
+
+Cost per decode step: O(W + S/R) instead of O(S); for S=524288, W=4096,
+R=64 that is 4096 + 8192 ≈ 12k keys — sub-quadratic end to end.
+
+The two partial attentions are merged with the standard online-softmax
+combine, so the local part is *exact* and only the far field is
+approximated — mirroring DIGEST's fresh-in/stale-out split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import repeat_kv
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class StaleKVConfig:
+    max_seq: int          # S (e.g. 524288)
+    window: int = 4096    # W — exact local span
+    ratio: int = 64       # R — tokens per stale summary slot
+
+    @property
+    def num_slots(self) -> int:
+        return self.max_seq // self.ratio
+
+
+def init_stale_kv_cache(cfg: StaleKVConfig, batch: int, kv_heads: int,
+                        head_dim: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "k_win": jnp.zeros((batch, cfg.window, kv_heads, head_dim), dtype),
+        "v_win": jnp.zeros((batch, cfg.window, kv_heads, head_dim), dtype),
+        "k_sum": jnp.zeros((batch, cfg.num_slots, kv_heads, head_dim),
+                           dtype),
+        "v_sum": jnp.zeros((batch, cfg.num_slots, kv_heads, head_dim),
+                           dtype),
+        # Pending block accumulator (the not-yet-pushed fresh rows).
+        "k_pend": jnp.zeros((batch, cfg.ratio, kv_heads, head_dim), dtype),
+        "v_pend": jnp.zeros((batch, cfg.ratio, kv_heads, head_dim), dtype),
+    }
+
+
+def _partial_attn(q32: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array) -> tuple[jax.Array, ...]:
+    """Returns (m, l, acc) online-softmax partials.
+
+    q32: (B, H, D) f32 (pre-scaled); k, v: (B, T, H, D); mask: (B, T)."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhd,bthd->bht", q32, kf)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                               # (B, H)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bht,bthd->bhd", p, vf)
+    return m, l, acc
+
+
+def _merge(p1, p2):
+    m1, l1, a1 = p1
+    m2, l2, a2 = p2
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return m, c1 * l1 + c2 * l2, c1[..., None] * a1 + c2[..., None] * a2
+
+
+def stale_kv_decode(cfg: StaleKVConfig, cache: dict, q: jax.Array,
+                    k_new: jax.Array, v_new: jax.Array, pos: jax.Array
+                    ) -> tuple[jax.Array, dict]:
+    """One decode step with stale far-field attention.
+
+    q: (B, 1, H, D); k_new, v_new: (B, 1, KV, D); pos: (B,) current index
+    (same for all rows in SPMD use — we use pos[0] for control flow).
+    Returns (attn_out (B,1,H,D), new cache).
+    """
+    b, _, h, d = q.shape
+    kv = k_new.shape[2]
+    rep = h // kv
+    p = pos[0]
+
+    # --- cache writes -----------------------------------------------------
+    win_slot = p % cfg.window
+    pend_slot = p % cfg.ratio
+    cache = dict(cache)
+    cache["k_win"] = jax.lax.dynamic_update_slice(
+        cache["k_win"], k_new, (0, win_slot, 0, 0))
+    cache["v_win"] = jax.lax.dynamic_update_slice(
+        cache["v_win"], v_new, (0, win_slot, 0, 0))
+    cache["k_pend"] = jax.lax.dynamic_update_slice(
+        cache["k_pend"], k_new, (0, pend_slot, 0, 0))
+    cache["v_pend"] = jax.lax.dynamic_update_slice(
+        cache["v_pend"], v_new, (0, pend_slot, 0, 0))
+
+    # Periodic PUSH: completed R-block → mean-pooled stale summary.
+    def push(c):
+        slot = p // cfg.ratio
+        ks = jnp.mean(c["k_pend"].astype(jnp.float32), axis=1,
+                      keepdims=True).astype(c["k_sum"].dtype)
+        vs = jnp.mean(c["v_pend"].astype(jnp.float32), axis=1,
+                      keepdims=True).astype(c["v_sum"].dtype)
+        c = dict(c)
+        c["k_sum"] = jax.lax.dynamic_update_slice(c["k_sum"], ks,
+                                                  (0, slot, 0, 0))
+        c["v_sum"] = jax.lax.dynamic_update_slice(c["v_sum"], vs,
+                                                  (0, slot, 0, 0))
+        return c
+
+    cache = jax.lax.cond(pend_slot == cfg.ratio - 1, push, lambda c: c,
+                         cache)
+
+    # --- attention ---------------------------------------------------------
+    q32 = q[:, 0].astype(jnp.float32) * (d ** -0.5)
+
+    # Local window (exact). Ring positions: index i holds absolute position
+    # i + window*floor(...) — valid iff abs_pos in (p-window, p].
+    idx = jnp.arange(cfg.window)
+    # Absolute position stored at ring index i:
+    abs_pos = jnp.where(idx <= win_slot, p - win_slot + idx,
+                        p - win_slot + idx - cfg.window)
+    win_mask = (abs_pos >= 0) & (abs_pos > p - cfg.window) & (abs_pos <= p)
+    part_local = _partial_attn(
+        q32, repeat_kv(cache["k_win"], rep), repeat_kv(cache["v_win"], rep),
+        jnp.broadcast_to(win_mask[None], (b, cfg.window)))
+
+    # Stale far field: only slots fully outside the local window.
+    slots = jnp.arange(cfg.num_slots)
+    slot_end = (slots + 1) * cfg.ratio - 1
+    sum_mask = slot_end < jnp.maximum(p - cfg.window + 1, 0)
+    part_far = _partial_attn(
+        q32, repeat_kv(cache["k_sum"], rep), repeat_kv(cache["v_sum"], rep),
+        jnp.broadcast_to(sum_mask[None], (b, cfg.num_slots)))
+    # Weight each summary slot by the R tokens it stands for.
+    m_f, l_f, a_f = part_far
+    part_far = (m_f, l_f * cfg.ratio, a_f * cfg.ratio)
+
+    m, l, acc = _merge(part_local, part_far)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype), cache
+
+
+def summaries_from_full_kv(cfg: StaleKVConfig, k_full: jax.Array,
+                           v_full: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Prefill→decode transition: pool an existing (B,S,KV,D) cache into
+    the stale summary table."""
+    b, s, kv, d = k_full.shape
+    n = s // cfg.ratio
+    ks = jnp.mean(k_full[:, :n * cfg.ratio].reshape(
+        b, n, cfg.ratio, kv, d).astype(jnp.float32), axis=2)
+    vs = jnp.mean(v_full[:, :n * cfg.ratio].reshape(
+        b, n, cfg.ratio, kv, d).astype(jnp.float32), axis=2)
+    return ks.astype(k_full.dtype), vs.astype(v_full.dtype)

@@ -1,0 +1,762 @@
+"""Decoder-only transformer family covering the 10 assigned architectures.
+
+One config dataclass + one block registry expresses dense (llama/phi/qwen/
+minitron/deepseek), MoE (scout, kimi), hybrid (recurrentgemma), SSM (xlstm),
+VLM (llama-3.2-vision) and audio (musicgen) backbones:
+
+  block kinds: "attn"   GQA self-attention + SwiGLU MLP
+               "swa"    sliding-window attention + MLP
+               "moe"    GQA self-attention + expert-parallel MoE FFN
+               "rec"    RG-LRU recurrent block + MLP (Griffin)
+               "mlstm"  xLSTM matrix-memory block (internal expansion)
+               "slstm"  xLSTM scalar-memory block (sequential)
+               "xattn"  cross-attention to vision patch embeddings + MLP
+
+The layer stack is ``pattern × repeats + tail`` and the repeated part runs
+under ``lax.scan`` with stacked parameters (one HLO body for 61-layer
+models — essential for dry-run compile times), with optional remat.
+
+Decode paths: ``decode_step`` (full KV cache — decode_32k) and
+``decode_step_long`` (stale-KV block attention / recurrent state —
+long_500k, see repro.models.stale_kv).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.models.attention import (cross_attention, decode_attention,
+                                    prefill_attention)
+from repro.models.moe import load_balance_loss, moe_ffn
+from repro.models.recurrent import (mlstm_parallel, mlstm_step, rg_lru,
+                                    rg_lru_step, slstm_scan)
+from repro.models.stale_kv import (StaleKVConfig, init_stale_kv_cache,
+                                   stale_kv_decode)
+from repro.nn import ParamSpec, apply_rope, dense, rms_norm, swiglu
+
+Pytree = Any
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    pattern: tuple = ("attn",)
+    tail: tuple = ()
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 1
+    moe_capacity_factor: float = 1.25
+    shared_expert: bool = False
+    # attention
+    qk_norm: bool = False
+    rope_theta: float = 500000.0
+    window: int = 2048                # for "swa" blocks
+    # recurrent
+    rnn_dim: int = 0                  # defaults to d_model
+    conv_width: int = 4
+    mlstm_expansion: int = 2
+    # VLM
+    vision_dim: int = 0
+    num_patches: int = 0
+    # long-context (stale-KV)
+    long_window: int = 4096
+    long_ratio: int = 64
+    # numerics / training
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"      # matrix weights; norms stay f32
+    optimizer: str = "adamw"
+    learning_rate: float = 3e-4
+    remat: bool = True
+    scan_layers: bool = True          # False → unrolled (true HLO costs)
+    attn_backend: str = "chunked"     # chunked|pallas|dense
+    moe_impl: str = "auto"
+    source: str = ""
+
+    def __post_init__(self):
+        body = self.num_layers - len(self.tail)
+        if body % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: layers {self.num_layers} != "
+                f"pattern {self.pattern} x repeats + tail {self.tail}")
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def repeats(self) -> int:
+        return (self.num_layers - len(self.tail)) // len(self.pattern)
+
+    @property
+    def rnn(self) -> int:
+        return self.rnn_dim or self.d_model
+
+    @property
+    def act_dtype(self):
+        return DTYPES[self.dtype]
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs per block kind
+# ---------------------------------------------------------------------------
+
+def _norm(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="zeros")
+
+
+def _attn_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    s = {
+        "ln1": _norm(d),
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"),
+                        fan_in_dims=(0, 1)),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), ("head_dim",), init="zeros")
+        s["k_norm"] = ParamSpec((hd,), ("head_dim",), init="zeros")
+    return s
+
+
+def _mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    return {
+        "ln2": _norm(d),
+        "w_gate": ParamSpec((d, ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d, ff), ("embed", "mlp")),
+        "w_down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def _moe_specs(cfg: ArchConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.d_ff
+    s = _attn_specs(cfg)
+    s.update({
+        "ln2": _norm(d),
+        "router": ParamSpec((d, e), ("embed", "expert"), init="normal"),
+        "w_gate_e": ParamSpec((e, d, ff), ("expert", "embed", "expert_mlp"),
+                              fan_in_dims=(1,)),
+        "w_up_e": ParamSpec((e, d, ff), ("expert", "embed", "expert_mlp"),
+                            fan_in_dims=(1,)),
+        "w_down_e": ParamSpec((e, ff, d), ("expert", "expert_mlp", "embed"),
+                              fan_in_dims=(1,)),
+    })
+    if cfg.shared_expert:
+        s.update({
+            "ws_gate": ParamSpec((d, ff), ("embed", "mlp")),
+            "ws_up": ParamSpec((d, ff), ("embed", "mlp")),
+            "ws_down": ParamSpec((ff, d), ("mlp", "embed")),
+        })
+    return s
+
+
+def _rec_specs(cfg: ArchConfig) -> dict:
+    d, r = cfg.d_model, cfg.rnn
+    return {
+        "ln1": _norm(d),
+        "w_y": ParamSpec((d, r), ("embed", "rnn")),
+        "w_x": ParamSpec((d, r), ("embed", "rnn")),
+        "conv_w": ParamSpec((cfg.conv_width, r), (None, "rnn"),
+                            init="normal"),
+        "w_gate_x": ParamSpec((d, r), ("embed", "rnn")),
+        "w_gate_a": ParamSpec((d, r), ("embed", "rnn")),
+        "log_lambda": ParamSpec((r,), ("rnn",), init="normal"),
+        "w_out": ParamSpec((r, d), ("rnn", "embed")),
+    }
+
+
+def _mlstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.mlstm_expansion * d
+    h = cfg.num_heads
+    dh = di // h
+    return {
+        "ln1": _norm(d),
+        "w_up": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "wq": ParamSpec((di, h, dh), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((di, h, dh), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((di, h, dh), ("mlp", "heads", "head_dim")),
+        "w_i": ParamSpec((di, h), ("mlp", "heads"), init="normal"),
+        "w_f": ParamSpec((di, h), ("mlp", "heads"), init="normal"),
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    return {
+        "ln1": _norm(d),
+        "w_in": ParamSpec((d, h, 4, dh), ("embed", "heads", None,
+                                          "head_dim")),
+        "r_z": ParamSpec((h, dh, dh), ("heads", "head_dim", None),
+                         fan_in_dims=(1,)),
+        "r_i": ParamSpec((h, dh, dh), ("heads", "head_dim", None),
+                         fan_in_dims=(1,)),
+        "r_f": ParamSpec((h, dh, dh), ("heads", "head_dim", None),
+                         fan_in_dims=(1,)),
+        "r_o": ParamSpec((h, dh, dh), ("heads", "head_dim", None),
+                         fan_in_dims=(1,)),
+        "w_out": ParamSpec((d, d), ("embed", "embed_out")),
+        **_mlp_specs(cfg, d_ff=2 * d),
+    }
+
+
+def _xattn_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    vd = cfg.vision_dim
+    return {
+        "ln1": _norm(d),
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((vd, kv, hd), (None, "kv_heads", "head_dim")),
+        "wv": ParamSpec((vd, kv, hd), (None, "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"),
+                        fan_in_dims=(0, 1)),
+        "gate": ParamSpec((1,), (None,), init="zeros"),
+        **_mlp_specs(cfg),
+    }
+
+
+def _block_specs(cfg: ArchConfig, kind: str) -> dict:
+    if kind == "attn" or kind == "swa":
+        return {**_attn_specs(cfg), **_mlp_specs(cfg)}
+    if kind == "moe":
+        return _moe_specs(cfg)
+    if kind == "rec":
+        return {**_rec_specs(cfg), **_mlp_specs(cfg)}
+    if kind == "mlstm":
+        return _mlstm_specs(cfg)
+    if kind == "slstm":
+        return _slstm_specs(cfg)
+    if kind == "xattn":
+        return _xattn_specs(cfg)
+    raise ValueError(kind)
+
+
+def _stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec((n,) + spec.shape, ("stack",) + spec.axes,
+                     init=spec.init, dtype=spec.dtype, scale=spec.scale,
+                     fan_in_dims=tuple(d + 1 for d in spec.fan_in_dims))
+
+
+def arch_specs(cfg: ArchConfig) -> Pytree:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"),
+                           init="embed", scale=0.02),
+        "final_norm": _norm(d),
+        "lm_head": ParamSpec((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+    specs["pattern"] = [
+        jax.tree.map(lambda s: _stack_spec(s, cfg.repeats),
+                     _block_specs(cfg, kind),
+                     is_leaf=lambda x: isinstance(x, ParamSpec))
+        for kind in cfg.pattern]
+    specs["tail"] = [_block_specs(cfg, kind) for kind in cfg.tail]
+    if cfg.param_dtype != "float32":
+        # Mixed-precision weight policy: matrix params in bf16 (the
+        # §Perf memory/collective lever), 1-D norm scales kept f32.
+        pd = DTYPES[cfg.param_dtype]
+
+        def cast(s: ParamSpec) -> ParamSpec:
+            if len(s.shape) <= 1:
+                return s
+            return dataclasses.replace(s, dtype=pd)
+
+        specs = jax.tree.map(cast, specs,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg: ArchConfig, p: dict, h: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = logical_constraint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _attn_out(p: dict, attn: jax.Array, x: jax.Array) -> jax.Array:
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(attn.dtype))
+    return x + logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def _mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["ln2"])
+    out = swiglu(h, p["w_gate"].astype(h.dtype), p["w_up"].astype(h.dtype),
+                 p["w_down"].astype(h.dtype))
+    return x + logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def _fwd_attn(cfg, p, x, ctx, *, window=0):
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _qkv(cfg, p, h, ctx["positions"])
+    attn = prefill_attention(q, k, v, window=window,
+                             backend=cfg.attn_backend)
+    x = _attn_out(p, attn, x)
+    return _mlp(p, x)
+
+
+def _fwd_moe(cfg, p, x, ctx):
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _qkv(cfg, p, h, ctx["positions"])
+    attn = prefill_attention(q, k, v, backend=cfg.attn_backend)
+    x = _attn_out(p, attn, x)
+    h2 = rms_norm(x, p["ln2"])
+    moe_params = {"router": p["router"], "w_gate": p["w_gate_e"],
+                  "w_up": p["w_up_e"], "w_down": p["w_down_e"]}
+    out = moe_ffn(h2, moe_params, cfg.experts_per_token,
+                  impl=cfg.moe_impl,
+                  capacity_factor=cfg.moe_capacity_factor)
+    if cfg.shared_expert:
+        out = out + swiglu(h2, p["ws_gate"].astype(h2.dtype),
+                           p["ws_up"].astype(h2.dtype),
+                           p["ws_down"].astype(h2.dtype))
+    return x + logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, D); w: (W, D)."""
+    width = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _fwd_rec(cfg, p, x, ctx):
+    h = rms_norm(x, p["ln1"])
+    y = jax.nn.gelu(dense(h, p["w_y"].astype(h.dtype)))
+    bx = dense(h, p["w_x"].astype(h.dtype))
+    bx = _conv1d_causal(bx, p["conv_w"])
+    gx = dense(h, p["w_gate_x"].astype(h.dtype))
+    ga = dense(h, p["w_gate_a"].astype(h.dtype))
+    lru, _ = rg_lru(bx, gx, ga, p["log_lambda"])
+    out = dense(y * lru, p["w_out"].astype(h.dtype))
+    x = x + logical_constraint(out, ("batch", "seq", "embed"))
+    return _mlp(p, x)
+
+
+def _fwd_mlstm(cfg, p, x, ctx):
+    h = rms_norm(x, p["ln1"])
+    up = dense(h, p["w_up"].astype(h.dtype))
+    di = up.shape[-1] // 2
+    xi, gate = up[..., :di], up[..., di:]
+    heads = cfg.num_heads
+    dh = di // heads
+    b, s, _ = xi.shape
+    q = jnp.einsum("bsd,dhk->bhsk", xi, p["wq"].astype(xi.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", xi, p["wk"].astype(xi.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", xi, p["wv"].astype(xi.dtype))
+    i_pre = jnp.einsum("bsd,dh->bhs", xi, p["w_i"].astype(xi.dtype))
+    f_pre = jnp.einsum("bsd,dh->bhs", xi, p["w_f"].astype(xi.dtype))
+    core = mlstm_parallel(q, k, v, i_pre, f_pre)          # (B,H,S,dh)
+    core = jnp.swapaxes(core, 1, 2).reshape(b, s, di)
+    out = dense(core * jax.nn.silu(gate), p["w_down"].astype(h.dtype))
+    return x + logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def _fwd_slstm(cfg, p, x, ctx):
+    h = rms_norm(x, p["ln1"])
+    wx = jnp.einsum("bsd,dhgk->bshgk", h, p["w_in"].astype(h.dtype))
+    hs, _ = slstm_scan(wx, {"z": p["r_z"], "i": p["r_i"], "f": p["r_f"],
+                            "o": p["r_o"]})
+    b, s = h.shape[:2]
+    out = dense(hs.reshape(b, s, -1), p["w_out"].astype(h.dtype))
+    x = x + logical_constraint(out, ("batch", "seq", "embed"))
+    return _mlp(p, x)
+
+
+def _fwd_xattn(cfg, p, x, ctx):
+    vis = ctx["vision"]
+    h = rms_norm(x, p["ln1"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bpv,vhk->bphk", vis, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bpv,vhk->bphk", vis, p["wv"].astype(h.dtype))
+    attn = cross_attention(q, k, v)
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(attn.dtype))
+    gate = jnp.tanh(p["gate"].astype(jnp.float32))[0]
+    x = x + (gate * logical_constraint(
+        out, ("batch", "seq", "embed"))).astype(x.dtype)
+    return _mlp(p, x)
+
+
+_FWD = {"attn": _fwd_attn, "swa": None, "moe": _fwd_moe, "rec": _fwd_rec,
+        "mlstm": _fwd_mlstm, "slstm": _fwd_slstm, "xattn": _fwd_xattn}
+
+
+def _apply_block(kind: str, cfg, p, x, ctx):
+    if kind == "swa":
+        return _fwd_attn(cfg, p, x, ctx, window=cfg.window)
+    return _FWD[kind](cfg, p, x, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / prefill-for-logits)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+            vision: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: (B, S) int32 → logits (B, S, vocab) f32."""
+    dt = cfg.act_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = logical_constraint(x, ("batch", "seq", "embed"))
+    ctx = {"positions": jnp.arange(tokens.shape[1]),
+           "vision": None if vision is None else vision.astype(dt)}
+
+    def body(x, rep_params):
+        for j, kind in enumerate(cfg.pattern):
+            x = _apply_block(kind, cfg, rep_params[j], x, ctx)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["pattern"])
+    else:
+        for r in range(cfg.repeats):
+            rep = jax.tree.map(lambda a: a[r], params["pattern"])
+            x, _ = body(x, rep)
+    for j, kind in enumerate(cfg.tail):
+        x = _apply_block(kind, cfg, params["tail"][j], x, ctx)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logical_constraint(logits, ("batch", "seq", "vocab"))
+
+
+def aux_moe_loss(cfg: ArchConfig, params: Pytree, tokens: jax.Array,
+                 x_embed: Optional[jax.Array] = None) -> jax.Array:
+    """Router load-balance loss, computed from first-pattern MoE routers."""
+    if cfg.num_experts == 0:
+        return jnp.asarray(0.0, jnp.float32)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.float32)
+    total = jnp.asarray(0.0, jnp.float32)
+    count = 0
+    for j, kind in enumerate(cfg.pattern):
+        if kind != "moe":
+            continue
+        router = params["pattern"][j]["router"][0]       # first repeat
+        xf = x.reshape(-1, cfg.d_model)
+        logits = xf @ router.astype(jnp.float32)
+        _, ids = jax.lax.top_k(logits, cfg.experts_per_token)
+        total = total + load_balance_loss(logits, ids.astype(jnp.int32),
+                                          cfg.num_experts)
+        count += 1
+    return total / max(count, 1)
+
+
+# ---------------------------------------------------------------------------
+# Decode: caches + single-token step
+# ---------------------------------------------------------------------------
+
+def _cache_block_specs(cfg: ArchConfig, kind: str, batch: int, max_seq: int,
+                       long: bool, dtype) -> dict:
+    """ParamSpec pytree for one block's decode cache (shape + logical axes,
+    used both to allocate zeros and to derive dry-run shardings)."""
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    kvh = ("batch", "kv_seq", "kv_heads", "head_dim")
+
+    def sp(shape, axes, dt=dtype):
+        return ParamSpec(shape, axes, init="zeros", dtype=dt)
+
+    if kind in ("attn", "moe"):
+        if long:
+            skv = StaleKVConfig(max_seq, cfg.long_window, cfg.long_ratio)
+            return {
+                "k_win": sp((batch, skv.window, kv, hd),
+                            ("batch", None, "kv_heads", "head_dim")),
+                "v_win": sp((batch, skv.window, kv, hd),
+                            ("batch", None, "kv_heads", "head_dim")),
+                "k_sum": sp((batch, skv.num_slots, kv, hd), kvh),
+                "v_sum": sp((batch, skv.num_slots, kv, hd), kvh),
+                "k_pend": sp((batch, skv.ratio, kv, hd),
+                             ("batch", None, "kv_heads", "head_dim")),
+                "v_pend": sp((batch, skv.ratio, kv, hd),
+                             ("batch", None, "kv_heads", "head_dim")),
+            }
+        return {"k": sp((batch, max_seq, kv, hd), kvh),
+                "v": sp((batch, max_seq, kv, hd), kvh)}
+    if kind == "swa":
+        w = min(cfg.window, max_seq)
+        return {"k": sp((batch, w, kv, hd),
+                        ("batch", None, "kv_heads", "head_dim")),
+                "v": sp((batch, w, kv, hd),
+                        ("batch", None, "kv_heads", "head_dim"))}
+    if kind == "xattn":
+        return {"k": sp((batch, cfg.num_patches, kv, hd),
+                        ("batch", "patches", "kv_heads", "head_dim")),
+                "v": sp((batch, cfg.num_patches, kv, hd),
+                        ("batch", "patches", "kv_heads", "head_dim"))}
+    if kind == "rec":
+        r = cfg.rnn
+        return {"h": sp((batch, r), ("batch", "rnn"), jnp.float32),
+                "conv": sp((batch, cfg.conv_width - 1, r),
+                           ("batch", None, "rnn"))}
+    if kind == "mlstm":
+        di = cfg.mlstm_expansion * cfg.d_model
+        h = cfg.num_heads
+        dh = di // h
+        return {"C": sp((batch, h, dh, dh),
+                        ("batch", "heads", "head_dim", None), jnp.float32),
+                "n": sp((batch, h, dh), ("batch", "heads", "head_dim"),
+                        jnp.float32),
+                "m": sp((batch, h), ("batch", "heads"), jnp.float32)}
+    if kind == "slstm":
+        h = cfg.num_heads
+        dh = cfg.d_model // h
+        ax = ("batch", "heads", "head_dim")
+        return {"c": sp((batch, h, dh), ax, jnp.float32),
+                "n": sp((batch, h, dh), ax, jnp.float32),
+                "m": sp((batch, h, dh), ax, jnp.float32),
+                "h": sp((batch, h, dh), ax, jnp.float32)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int,
+                long: bool = False) -> dict:
+    dt = cfg.act_dtype
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda s: _stack_spec(s, cfg.repeats), tree,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    return {
+        "pattern": [stack(_cache_block_specs(cfg, kind, batch, max_seq,
+                                             long, dt))
+                    for kind in cfg.pattern],
+        "tail": [_cache_block_specs(cfg, kind, batch, max_seq, long, dt)
+                 for kind in cfg.tail],
+        "pos": ParamSpec((batch,), ("batch",), init="zeros",
+                         dtype=jnp.int32),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               long: bool = False) -> dict:
+    specs = cache_specs(cfg, batch, max_seq, long)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _dec_attn(cfg, p, x, cache, pos, ctx, *, window=0, long=False):
+    """x: (B, 1, d). Returns (new_x, new_cache)."""
+    h = rms_norm(x, p["ln1"])
+    positions = pos[:, None]                              # (B, 1)
+    q, k, v = _qkv(cfg, p, h, positions)
+    if long:
+        attn, cache = stale_kv_decode(ctx["skv_cfg"], cache, q, k, v, pos)
+    elif window > 0:
+        slot = pos[0] % window
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, slot, 0, 0))
+        # Ring buffer: positions are implicit; mask handled via abs pos.
+        idx = jnp.arange(cache["k"].shape[1])
+        p0 = pos[0]
+        abs_pos = jnp.where(idx <= slot, p0 - slot + idx,
+                            p0 - slot + idx - cache["k"].shape[1])
+        # decode over ring with explicit mask via big-cache path:
+        from repro.models.attention import repeat_kv as _rep
+        rep = cfg.num_heads // cfg.num_kv_heads
+        q32 = q[:, 0].astype(jnp.float32) * (cfg.hd ** -0.5)
+        kf = _rep(cache["k"], rep).astype(jnp.float32)
+        vf = _rep(cache["v"], rep).astype(jnp.float32)
+        logits = jnp.einsum("bhd,bshd->bhs", q32, kf)
+        mask = (abs_pos >= 0) & (abs_pos <= p0)
+        logits = jnp.where(mask[None, None, :], logits, -1e30)
+        pa = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhs,bshd->bhd", pa, vf)[:, None].astype(q.dtype)
+    else:
+        slot = pos[0]
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, slot, 0, 0))
+        attn = decode_attention(q, cache["k"], cache["v"], pos)
+    x = _attn_out(p, attn, x)
+    return x, cache
+
+
+def _dec_block(kind, cfg, p, x, cache, pos, ctx):
+    long = ctx["long"]
+    if kind in ("attn", "moe"):
+        x, cache = _dec_attn(cfg, p, x, cache, pos, ctx, long=long)
+        if kind == "attn":
+            return _mlp(p, x), cache
+        h2 = rms_norm(x, p["ln2"])
+        moe_params = {"router": p["router"], "w_gate": p["w_gate_e"],
+                      "w_up": p["w_up_e"], "w_down": p["w_down_e"]}
+        out = moe_ffn(h2, moe_params, cfg.experts_per_token,
+                      impl=cfg.moe_impl,
+                      capacity_factor=cfg.moe_capacity_factor)
+        if cfg.shared_expert:
+            out = out + swiglu(h2, p["ws_gate"].astype(h2.dtype),
+                               p["ws_up"].astype(h2.dtype),
+                               p["ws_down"].astype(h2.dtype))
+        return x + out, cache
+    if kind == "swa":
+        x, cache = _dec_attn(cfg, p, x, cache, pos, ctx,
+                             window=cfg.window)
+        return _mlp(p, x), cache
+    if kind == "xattn":
+        h = rms_norm(x, p["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+        attn = cross_attention(q, cache["k"], cache["v"])
+        out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(attn.dtype))
+        gate = jnp.tanh(p["gate"].astype(jnp.float32))[0]
+        x = x + (gate * out).astype(x.dtype)
+        return _mlp(p, x), cache
+    if kind == "rec":
+        h = rms_norm(x, p["ln1"])[:, 0]                   # (B, d)
+        y = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+        bx = h @ p["w_x"].astype(h.dtype)
+        conv = cache["conv"]
+        w = p["conv_w"].astype(jnp.float32)
+        acc = bx.astype(jnp.float32) * w[0]
+        for i in range(1, cfg.conv_width):
+            acc = acc + conv[:, -i].astype(jnp.float32) * w[i]
+        bx = acc.astype(h.dtype)
+        new_conv = jnp.concatenate(
+            [conv[:, 1:], (h @ p["w_x"].astype(h.dtype))[:, None]], axis=1)
+        gx = h @ p["w_gate_x"].astype(h.dtype)
+        ga = h @ p["w_gate_a"].astype(h.dtype)
+        lru, h_new = rg_lru_step(bx, gx, ga, p["log_lambda"], cache["h"])
+        out = (y * lru) @ p["w_out"].astype(h.dtype)
+        x = x + out[:, None]
+        return _mlp(p, x), {"h": h_new, "conv": new_conv}
+    if kind == "mlstm":
+        h = rms_norm(x, p["ln1"])[:, 0]
+        up = h @ p["w_up"].astype(h.dtype)
+        di = up.shape[-1] // 2
+        xi, gate = up[..., :di], up[..., di:]
+        q = jnp.einsum("bd,dhk->bhk", xi, p["wq"].astype(xi.dtype))
+        k = jnp.einsum("bd,dhk->bhk", xi, p["wk"].astype(xi.dtype))
+        v = jnp.einsum("bd,dhk->bhk", xi, p["wv"].astype(xi.dtype))
+        i_pre = jnp.einsum("bd,dh->bh", xi, p["w_i"].astype(xi.dtype))
+        f_pre = jnp.einsum("bd,dh->bh", xi, p["w_f"].astype(xi.dtype))
+        core, new_state = mlstm_step(q, k, v, i_pre, f_pre, cache)
+        core = core.reshape(core.shape[0], -1)
+        out = (core.astype(h.dtype) * jax.nn.silu(gate)) @ \
+            p["w_down"].astype(h.dtype)
+        return x + out[:, None], new_state
+    if kind == "slstm":
+        h = rms_norm(x, p["ln1"])
+        wx = jnp.einsum("bsd,dhgk->bshgk", h, p["w_in"].astype(h.dtype))
+        hs, new_state = slstm_scan(wx, {"z": p["r_z"], "i": p["r_i"],
+                                        "f": p["r_f"], "o": p["r_o"]},
+                                   state=cache)
+        b = h.shape[0]
+        out = dense(hs.reshape(b, 1, -1), p["w_out"].astype(h.dtype))
+        x = x + out
+        return _mlp(p, x), new_state
+    raise ValueError(kind)
+
+
+def precompute_vision_cache(cfg: ArchConfig, params: Pytree,
+                            cache: dict, vision: jax.Array) -> dict:
+    """Fill xattn cache entries with projected vision K/V."""
+    vis = vision.astype(cfg.act_dtype)
+    cache = dict(cache)
+    new_pattern = []
+    for j, kind in enumerate(cfg.pattern):
+        entry = cache["pattern"][j]
+        if kind == "xattn":
+            p = params["pattern"][j]
+            k = jnp.einsum("bpv,rvhk->rbphk", vis, p["wk"].astype(vis.dtype))
+            v = jnp.einsum("bpv,rvhk->rbphk", vis, p["wv"].astype(vis.dtype))
+            entry = {"k": k, "v": v}
+        new_pattern.append(entry)
+    cache["pattern"] = new_pattern
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: Pytree, cache: dict,
+                tokens: jax.Array, long: bool = False
+                ) -> tuple[jax.Array, dict]:
+    """tokens: (B, 1) → (logits (B, 1, vocab), new cache)."""
+    dt = cfg.act_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    pos = cache["pos"]
+    max_seq = None
+    ctx = {"long": long, "skv_cfg": None}
+    if long:
+        # Infer S from the summary table of the first attn-ish block.
+        for j, kind in enumerate(cfg.pattern):
+            if kind in ("attn", "moe"):
+                n_slots = cache["pattern"][j]["k_sum"].shape[2]
+                ctx["skv_cfg"] = StaleKVConfig(
+                    n_slots * cfg.long_ratio, cfg.long_window,
+                    cfg.long_ratio)
+                break
+
+    def body(x, xs):
+        rep_params, rep_cache = xs
+        new_cache = []
+        for j, kind in enumerate(cfg.pattern):
+            x, c = _dec_block(kind, cfg, rep_params[j], x,
+                              rep_cache[j], pos, ctx)
+            new_cache.append(c)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_pattern_cache = jax.lax.scan(
+            body, x, (params["pattern"], cache["pattern"]))
+    else:
+        per_rep = []
+        for r in range(cfg.repeats):
+            xs = jax.tree.map(lambda a: a[r],
+                              (params["pattern"], cache["pattern"]))
+            x, c = body(x, xs)
+            per_rep.append(c)
+        new_pattern_cache = jax.tree.map(
+            lambda *cs: jnp.stack(cs), *per_rep)
+    new_tail = []
+    for j, kind in enumerate(cfg.tail):
+        x, c = _dec_block(kind, cfg, params["tail"][j], x,
+                          cache["tail"][j], pos, ctx)
+        new_tail.append(c)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    new_cache = {"pattern": new_pattern_cache, "tail": new_tail,
+                 "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,12 @@
+from repro.nn.params import (ParamSpec, abstract_params, init_params,
+                             param_axes, param_bytes, param_count)
+from repro.nn.layers import (accuracy, apply_rope, dense, gelu_mlp,
+                             layer_norm, micro_f1, rms_norm, rope_freqs,
+                             softmax_cross_entropy, swiglu)
+
+__all__ = [
+    "ParamSpec", "abstract_params", "init_params", "param_axes",
+    "param_bytes", "param_count", "accuracy", "apply_rope", "dense",
+    "gelu_mlp", "layer_norm", "micro_f1", "rms_norm", "rope_freqs",
+    "softmax_cross_entropy", "swiglu",
+]

@@ -1,0 +1,91 @@
+"""Parameter specification, initialization, and logical-axis metadata.
+
+The framework is deliberately functional (no flax): a model is described by a
+pytree of :class:`ParamSpec` leaves.  ``init_params`` turns the spec tree into
+an array pytree; ``param_axes`` extracts the parallel pytree of logical axis
+names used by the distribution layer to derive shardings (MaxText-style
+logical axis rules, see ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    # Logical axis name per dim (None = replicated / unnamed dim).
+    axes: tuple[Optional[str], ...]
+    init: str = "lecun"  # lecun | normal | zeros | ones | embed
+    dtype: Any = jnp.float32
+    scale: float = 1.0
+    # Dims treated as fan-in for variance-scaling inits.
+    fan_in_dims: tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = max(1, int(np.prod([spec.shape[d] for d in spec.fan_in_dims])))
+    if spec.init == "lecun":
+        std = spec.scale * math.sqrt(1.0 / fan_in)
+    elif spec.init == "normal":
+        std = spec.scale * 0.02
+    elif spec.init == "embed":
+        std = spec.scale * 1.0
+    else:
+        raise ValueError(f"unknown init {spec.init!r}")
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(
+        spec.dtype)
+
+
+def init_params(key: jax.Array, specs: Pytree) -> Pytree:
+    """Initialize an array pytree from a ParamSpec pytree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def param_axes(specs: Pytree) -> Pytree:
+    """Pytree of logical-axis tuples, parallel to init_params output."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def abstract_params(specs: Pytree) -> Pytree:
+    """ShapeDtypeStruct pytree (for dry-run lowering, no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=is_spec)
+
+
+def param_count(specs: Pytree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs: Pytree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adam, adamw,
+                                    clip_by_global_norm, constant_schedule,
+                                    make_optimizer, sgd,
+                                    warmup_cosine_schedule)
+
+__all__ = [
+    "Optimizer", "adafactor", "adam", "adamw", "clip_by_global_norm",
+    "constant_schedule", "make_optimizer", "sgd", "warmup_cosine_schedule",
+]

@@ -1,0 +1,203 @@
+"""Optimizers (no optax): SGD, Adam(W), Adafactor, with LR schedules.
+
+An optimizer is a pair of pure functions wrapped in :class:`Optimizer`:
+``init(params) -> state`` and
+``update(grads, state, params, step) -> (new_params, new_state)``.
+
+Adafactor exists because the trillion-parameter assigned architecture
+(kimi-k2) cannot hold Adam's 8 bytes/param of momenta on a 512-chip v5e
+footprint; factored second moments cost O(rows+cols).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int,
+                           final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Optimizer container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jax.Array],
+                     tuple[Pytree, Pytree]]
+
+
+def _global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum)
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float | Schedule, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p - lr_t * g.astype(p.dtype)).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p - lr_t * m).astype(p.dtype), params, new_m)
+        return new_params, new_m
+
+    return Optimizer("sgd", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        new_m = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        new_v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+def adam(lr: float | Schedule, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float | Schedule, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                # Factor over the two trailing dims; leading dims (layers,
+                # experts) are kept — still O(rows+cols) per matrix.
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"row": row, "col": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = sched(step)
+
+        def leaf(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                row = beta * s["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * s["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row[..., :, None] / jnp.maximum(row_mean[..., None],
+                                                        eps)
+                        * col[..., None, :])
+                upd = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                new_s = {"row": row, "col": col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # Update clipping (RMS of update <= clip_threshold).
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_state = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_params, new_state
+
+    return Optimizer("adafactor", init, update)
+
+
+REGISTRY = {"sgd": sgd, "adam": adam, "adamw": adamw, "adafactor": adafactor}
+
+
+def make_optimizer(name: str, lr: float | Schedule, **kw) -> Optimizer:
+    return REGISTRY[name](lr, **kw)

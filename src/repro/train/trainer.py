@@ -1,0 +1,224 @@
+"""Train/serve steps for the assigned architectures, with DIGEST-style
+periodic parameter synchronization across pods.
+
+DIGEST generalized (DESIGN.md §4.1): within a pod, gradients all-reduce
+every step over the fast intra-pod ICI (the paper's per-round parameter
+AGG); *across pods*, parameters are synchronized only every N steps over
+the slow inter-pod link (the paper's periodic stale sync, aimed exactly at
+the weakest link).  Implementation: parameters carry an explicit leading
+``(n_pod, ...)`` dim sharded over the "pod" mesh axis; the per-pod step is
+``vmap``-ed over that dim (local SGD), and a ``lax.cond`` on
+``step % N == N-1`` averages the copies — pure GSPMD, no manual
+collectives, lowers to one all-reduce over "pod" every N steps.
+
+``sync_mode``:
+  "every_step" — baseline data parallelism (pod axis folded into batch;
+                 no divergence; the paper's "propagation"-style fresh sync)
+  "digest"     — periodic parameter sync as above (the paper's method)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (ArchConfig, arch_specs, aux_moe_loss,
+                                      decode_step, forward)
+from repro.nn import (abstract_params, init_params, param_axes,
+                      softmax_cross_entropy)
+from repro.optim import (Optimizer, clip_by_global_norm, make_optimizer,
+                         warmup_cosine_schedule)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    sync_mode: str = "every_step"        # every_step | digest
+    sync_interval: int = 10              # N (pod-sync period, digest mode)
+    n_pod: int = 1
+    # "vmap": per-pod parameter copies with an explicit leading dim —
+    #   single-device-runnable semantics (tests, CPU).
+    # "shard_map": manual over the mesh "pod" axis, GSPMD inside — the
+    #   production path (each pod compiles like a single-pod program; one
+    #   conditional pmean over "pod" every N steps; no layout churn).
+    pod_impl: str = "vmap"
+    grad_clip: float = 1.0
+    aux_loss_weight: float = 0.01
+    total_steps: int = 10_000
+    warmup_steps: int = 200
+
+
+def make_arch_optimizer(cfg: ArchConfig, settings: TrainSettings
+                        ) -> Optimizer:
+    sched = warmup_cosine_schedule(cfg.learning_rate,
+                                   settings.warmup_steps,
+                                   settings.total_steps)
+    if cfg.optimizer == "adafactor":
+        return make_optimizer("adafactor", sched)
+    if cfg.optimizer == "adamw":
+        return make_optimizer("adamw", sched, weight_decay=0.01)
+    return make_optimizer(cfg.optimizer, sched)
+
+
+def _stacked_pods(settings: TrainSettings) -> bool:
+    return (settings.sync_mode == "digest" and settings.n_pod > 1
+            and settings.pod_impl == "vmap")
+
+
+def init_train_state(cfg: ArchConfig, settings: TrainSettings,
+                     seed: int = 0) -> dict:
+    opt = make_arch_optimizer(cfg, settings)
+    params = init_params(jax.random.PRNGKey(seed), arch_specs(cfg))
+    if _stacked_pods(settings):
+        params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None],
+                                       (settings.n_pod,) + p.shape),
+            params)
+        opt_state = jax.vmap(opt.init)(params)
+    else:
+        opt_state = opt.init(params)
+    return {"params": params, "opt_state": opt_state,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ArchConfig, settings: TrainSettings) -> dict:
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    return jax.eval_shape(lambda: init_train_state(cfg, settings))
+
+
+def _loss_fn(cfg: ArchConfig, settings: TrainSettings, params: Pytree,
+             batch: dict) -> tuple[jax.Array, dict]:
+    logits = forward(cfg, params, batch["tokens"], batch.get("vision"))
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce
+    aux = jnp.asarray(0.0, jnp.float32)
+    if cfg.num_experts:
+        aux = aux_moe_loss(cfg, params, batch["tokens"])
+        loss = loss + settings.aux_loss_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, settings: TrainSettings
+                    ) -> Callable[[dict, dict], tuple[dict, dict]]:
+    opt = make_arch_optimizer(cfg, settings)
+
+    def one_pod_step(params, opt_state, batch, step):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: _loss_fn(cfg, settings, p, batch), has_aux=True
+        )(params)
+        if settings.grad_clip:
+            grads = clip_by_global_norm(grads, settings.grad_clip)
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        return new_params, new_opt, loss, parts
+
+    if settings.sync_mode != "digest" or settings.n_pod <= 1:
+        def train_step(state, batch):
+            params, opt_state, loss, parts = one_pod_step(
+                state["params"], state["opt_state"], batch, state["step"])
+            metrics = {"loss": loss, **parts}
+            return {"params": params, "opt_state": opt_state,
+                    "step": state["step"] + 1}, metrics
+        return train_step
+
+    if settings.pod_impl == "shard_map":
+        return _make_pod_shard_map_step(cfg, settings, opt, one_pod_step)
+
+    n_pod = settings.n_pod
+
+    def train_step(state, batch):
+        # batch tokens: (B_global, S) → (n_pod, B/n_pod, S)
+        def split(x):
+            return x.reshape((n_pod, x.shape[0] // n_pod) + x.shape[1:])
+        pod_batch = jax.tree.map(split, batch)
+        params, opt_state, loss, parts = jax.vmap(
+            one_pod_step, in_axes=(0, 0, 0, None))(
+                state["params"], state["opt_state"], pod_batch,
+                state["step"])
+
+        # Periodic cross-pod parameter synchronization (DIGEST).
+        do_sync = (state["step"] + 1) % settings.sync_interval == 0
+
+        def sync(tree):
+            return jax.tree.map(
+                lambda p: jnp.broadcast_to(
+                    jnp.mean(p.astype(jnp.float32), axis=0,
+                             keepdims=True).astype(p.dtype),
+                    p.shape),
+                tree)
+
+        params = jax.lax.cond(do_sync, sync, lambda t: t, params)
+        metrics = {"loss": jnp.mean(loss),
+                   "ce": jnp.mean(parts["ce"]),
+                   "aux": jnp.mean(parts["aux"]),
+                   "pod_divergence": _pod_divergence(params)}
+        return {"params": params, "opt_state": opt_state,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def _make_pod_shard_map_step(cfg: ArchConfig, settings: TrainSettings,
+                             opt: Optimizer, one_pod_step) -> Callable:
+    """DIGEST pod sync, production form: jax.shard_map manual over "pod",
+    GSPMD auto inside. Parameters carry NO pod dimension — each pod's
+    devices hold their own (divergent between syncs) copy under a
+    nominally-replicated layout (check_vma=False), exactly local SGD.
+    One conditional ``pmean`` over "pod" every N steps is the only
+    inter-pod collective."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import current_mesh
+
+    def train_step(state, batch):
+        mesh = current_mesh()
+        if mesh is None or "pod" not in mesh.axis_names:
+            raise ValueError("pod_impl='shard_map' needs a mesh with a "
+                             "'pod' axis active via axis_rules(...)")
+
+        def pod_local(params, opt_state, step, batch):
+            new_params, new_opt, loss, parts = one_pod_step(
+                params, opt_state, batch, step)
+            do_sync = (step + 1) % settings.sync_interval == 0
+
+            def sync(t):
+                return jax.tree.map(
+                    lambda a: jax.lax.pmean(a, "pod"), t)
+
+            new_params = jax.lax.cond(do_sync, sync, lambda t: t,
+                                      new_params)
+            loss = jax.lax.pmean(loss, "pod")
+            parts = jax.tree.map(lambda a: jax.lax.pmean(a, "pod"), parts)
+            return new_params, new_opt, loss, parts
+
+        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        sm = jax.shard_map(
+            pod_local, mesh=mesh,
+            in_specs=(P(), P(), P(), batch_specs),
+            out_specs=(P(), P(), P(), P()),
+            axis_names={"pod"}, check_vma=False)
+        params, opt_state, loss, parts = sm(
+            state["params"], state["opt_state"], state["step"], batch)
+        metrics = {"loss": loss, **parts}
+        return {"params": params, "opt_state": opt_state,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def _pod_divergence(params: Pytree) -> jax.Array:
+    """Mean L2 distance of pod copies from their mean (diagnostic)."""
+    def leaf(p):
+        mu = jnp.mean(p.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.sum(jnp.square(p.astype(jnp.float32) - mu))
+    total = sum(jax.tree.leaves(jax.tree.map(leaf, params)))
+    return jnp.sqrt(total)
+
+
+def make_serve_step(cfg: ArchConfig, long: bool = False) -> Callable:
+    """serve_step(params, cache, tokens) → (logits, new_cache)."""
+    def serve_step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, long=long)
+    return serve_step

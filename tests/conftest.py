@@ -1,0 +1,14 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any inherited XLA_FLAGS out.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

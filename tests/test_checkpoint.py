@@ -1,0 +1,38 @@
+"""Checkpoint save/restore."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "layers": [jnp.ones((2,)), jnp.zeros((3,))]},
+            "step": jnp.asarray(7)}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_allclose(restored["params"]["w"],
+                               tree["params"]["w"])
+    np.testing.assert_allclose(restored["params"]["layers"][0],
+                               tree["params"]["layers"][0])
+
+
+def test_latest_of_many(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 5, 3):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"x": jnp.zeros((3,))})
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nope"), {"x": jnp.zeros(1)})

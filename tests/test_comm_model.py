@@ -1,0 +1,42 @@
+"""Analytic communication model (§3.3): ordering + scaling claims."""
+import numpy as np
+
+from repro.core import epoch_comm_bytes, epoch_time_model, khop_halo_sizes
+from repro.graph import build_partitions, make_dataset
+from repro.models.gnn import GNNConfig, gnn_specs
+from repro.nn import param_count
+
+
+def _setup():
+    g = make_dataset("flickr-sim", scale=0.2)
+    sp = build_partitions(g, 4)
+    cfg = GNNConfig(num_layers=3, in_dim=g.features.shape[1],
+                    hidden_dim=64, num_classes=8)
+    pc = param_count(gnn_specs(cfg))
+    return g, sp, pc
+
+
+def test_mode_ordering():
+    g, sp, pc = _setup()
+    b = {m: epoch_comm_bytes(m, sp, g, pc, 64, 3, 10)
+         for m in ("partition", "digest", "propagation")}
+    assert b["partition"] < b["digest"] < b["propagation"]
+
+
+def test_interval_amortization():
+    g, sp, pc = _setup()
+    b1 = epoch_comm_bytes("digest", sp, g, pc, 64, 3, 1)
+    b10 = epoch_comm_bytes("digest", sp, g, pc, 64, 3, 10)
+    assert b10 < b1
+
+
+def test_khop_halo_monotone():
+    g, sp, _ = _setup()
+    kh = khop_halo_sizes(g, sp, 3)
+    assert (np.diff(kh, axis=1) >= 0).all()     # halos grow with depth
+
+
+def test_time_model_positive():
+    g, sp, pc = _setup()
+    t = epoch_time_model("digest", sp, g, pc, 64, 3, g.features.shape[1])
+    assert t["t_epoch"] > 0 and t["bytes"] > 0

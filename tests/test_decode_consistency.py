@@ -1,0 +1,60 @@
+"""Teacher-forcing: token-by-token decode must match the training forward
+for every architecture family (attn, GQA, qk-norm, moe, rec, xlstm, vlm)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_arch
+from repro.models.transformer import (arch_specs, decode_step, forward,
+                                      init_cache, precompute_vision_cache)
+from repro.nn import init_params
+
+FAMILIES = ["qwen3_0_6b", "recurrentgemma_9b", "xlstm_1_3b",
+            "llama4_scout_17b_a16e", "llama_3_2_vision_11b",
+            "musicgen_large"]
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_decode_matches_forward(name):
+    cfg = get_smoke_arch(name)
+    params = init_params(jax.random.PRNGKey(0), arch_specs(cfg))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    vis = None
+    if cfg.vision_dim:
+        vis = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.num_patches, cfg.vision_dim))
+    ref = forward(cfg, params, toks, vis)
+    cache = init_cache(cfg, B, S)
+    if cfg.vision_dim:
+        cache = precompute_vision_cache(cfg, params, cache, vis)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t+1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(dec - ref))) / scale < 2e-2
+
+
+def test_long_decode_exact_within_window():
+    import dataclasses
+    cfg = get_smoke_arch("phi3_mini_3_8b")
+    cfg = dataclasses.replace(cfg, long_window=32, long_ratio=8)
+    params = init_params(jax.random.PRNGKey(0), arch_specs(cfg))
+    B, S = 1, 48
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    cache_f = init_cache(cfg, B, S)
+    cache_l = init_cache(cfg, B, S, long=True)
+    sf = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    sl = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t, long=True))
+    for t in range(S):
+        lf, cache_f = sf(params, cache_f, toks[:, t:t+1])
+        ll, cache_l = sl(params, cache_l, toks[:, t:t+1])
+        if t < cfg.long_window:
+            np.testing.assert_allclose(ll, lf, atol=1e-4, rtol=1e-4)
+        assert bool(jnp.all(jnp.isfinite(ll)))

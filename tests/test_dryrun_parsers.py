@@ -1,0 +1,57 @@
+"""Unit tests for the dry-run HLO analysis tooling (pure parsing — no
+512-device mesh required)."""
+import numpy as np
+
+from repro.launch.dryrun import (_groups_cross_pod, collective_bytes)
+
+
+HLO_SAMPLE = """
+HloModule test
+  %ar = f32[16,4096]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag.1 = bf16[2,32768,32,64]{3,2,1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={1}
+  %done = f32[8]{0} all-reduce-done(%h)
+  %a2a = f32[128]{0} all-to-all(%z), replica_groups=[2,256]<=[512]
+  %other = f32[4]{0} add(%a, %b)
+"""
+
+
+def test_collective_bytes_totals():
+    out = collective_bytes(HLO_SAMPLE)
+    ar = 16 * 4096 * 4
+    ag = 2 * 32768 * 32 * 64 * 2
+    a2a = 128 * 4
+    assert out["per_op"]["all-reduce"] == ar       # -done not re-counted
+    assert out["per_op"]["all-gather"] == ag
+    assert out["per_op"]["all-to-all"] == a2a
+    assert out["total"] == ar + ag + a2a
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_inter_pod_classification_contiguous():
+    # groups of 16 contiguous devices inside a 512 fleet: never cross 256
+    line = "%ar = f32[4]{0} all-reduce(%x), replica_groups=[32,16]<=[512]"
+    assert not _groups_cross_pod(line, 256)
+    # one group of all 512 devices: crosses
+    line2 = "%ar = f32[4]{0} all-reduce(%x), replica_groups=[1,512]<=[512]"
+    assert _groups_cross_pod(line2, 256)
+
+
+def test_inter_pod_classification_transposed():
+    # [256,2]<=[2,256]T(1,0): groups pair device i with i+256 → cross-pod
+    line = ("%cp = f32[4]{0} collective-permute(%x), "
+            "replica_groups=[256,2]<=[2,256]T(1,0)")
+    assert _groups_cross_pod(line, 256)
+
+
+def test_inter_pod_explicit_format():
+    line = "%ar = f32[4]{0} all-reduce(%x), replica_groups={{0,1},{2,3}}"
+    assert not _groups_cross_pod(line, 256)
+    line2 = "%ar = f32[4]{0} all-reduce(%x), replica_groups={{0,300}}"
+    assert _groups_cross_pod(line2, 256)
+
+
+def test_pod_split_totals():
+    out = collective_bytes(HLO_SAMPLE, pod_boundary=256)
+    # the 512-wide all-to-all ([2,256]<=[512] → contiguous 256-blocks: each
+    # group is exactly one pod) must NOT count as inter-pod
+    assert out["inter_pod"] == 0

@@ -1,0 +1,92 @@
+"""Graph substrate invariants (+ property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (build_partitions, edge_cut, from_edges,
+                         gcn_norm_weights, greedy_partition, make_dataset,
+                         random_partition, sbm_graph)
+
+
+def test_dataset_registry():
+    for name in ["arxiv-sim", "flickr-sim", "reddit-sim"]:
+        g = make_dataset(name, scale=0.05)
+        g.validate()
+        assert g.train_mask.sum() > 0
+        assert not (g.train_mask & g.val_mask).any()
+
+
+def test_gcn_norm_rows_bounded():
+    g = make_dataset("flickr-sim", scale=0.1)
+    rows, cols, w = gcn_norm_weights(g)
+    sums = np.zeros(g.num_nodes)
+    np.add.at(sums, rows, w)
+    assert (w > 0).all()
+    # symmetric normalization keeps row sums O(1) (not strictly <=1)
+    assert sums.max() < 3.0
+    assert sums.min() > 0.0
+
+
+@pytest.mark.parametrize("method", ["greedy", "random"])
+def test_partition_covers_all_nodes(method):
+    g = make_dataset("flickr-sim", scale=0.15)
+    sp = build_partitions(g, 4, method=method)
+    ids = sp.local_ids[sp.local_valid]
+    assert len(ids) == g.num_nodes
+    assert len(np.unique(ids)) == g.num_nodes
+
+
+def test_greedy_cut_beats_random():
+    g = make_dataset("flickr-sim", scale=0.2)
+    cg = edge_cut(g, greedy_partition(g, 4))
+    cr = edge_cut(g, random_partition(g, 4))
+    assert cg < cr
+
+
+def test_partition_reconstructs_p():
+    """P_in + P_out per subgraph == global P rows (no edge dropped)."""
+    g = sbm_graph(num_nodes=300, num_classes=4, seed=1)
+    sp = build_partitions(g, 3)
+    rows, cols, w = gcn_norm_weights(g)
+    P = np.zeros((g.num_nodes, g.num_nodes))
+    P[rows, cols] = w
+    for m in range(3):
+        loc = sp.local_ids[m][sp.local_valid[m]]
+        halo = sp.halo_ids[m][sp.halo_valid[m]]
+        S, H = sp.part_size, sp.halo_size
+        Pin = np.zeros((S, S))
+        Pout = np.zeros((S, H))
+        for i in range(S):
+            for kk in range(sp.in_nbr.shape[-1]):
+                c = sp.in_nbr[m, i, kk]
+                if c < S:
+                    Pin[i, c] += sp.in_wts[m, i, kk]
+            for kk in range(sp.out_nbr.shape[-1]):
+                c = sp.out_nbr[m, i, kk]
+                if c < H:
+                    Pout[i, c] += sp.out_wts[m, i, kk]
+        np.testing.assert_allclose(Pin[:len(loc), :len(loc)],
+                                   P[np.ix_(loc, loc)], atol=1e-6)
+        np.testing.assert_allclose(Pout[:len(loc), :len(halo)],
+                                   P[np.ix_(loc, halo)], atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 120), m=st.integers(2, 5),
+       seed=st.integers(0, 1000))
+def test_partition_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(max(n * 3, 16), 2))
+    feats = rng.normal(size=(n, 8)).astype(np.float32)
+    labels = rng.integers(0, 3, size=n).astype(np.int32)
+    g = from_edges(n, e, feats, labels)
+    sp = build_partitions(g, m)
+    # every node exactly once; halo ∩ local = ∅ per part
+    ids = sp.local_ids[sp.local_valid]
+    assert sorted(ids.tolist()) == list(range(n))
+    for i in range(m):
+        loc = set(sp.local_ids[i][sp.local_valid[i]].tolist())
+        halo = set(sp.halo_ids[i][sp.halo_valid[i]].tolist())
+        assert not loc & halo
+    # halo ratio metric is finite
+    assert np.isfinite(sp.halo_ratio()).all()

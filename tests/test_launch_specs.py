@@ -1,0 +1,59 @@
+"""Dry-run spec plumbing (shapes only, no 512-device mesh needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.specs import (SHAPES, input_specs, opt_state_specs,
+                                serve_state_specs, train_state_specs,
+                                abstract_from_specs)
+from repro.models.transformer import arch_specs
+from repro.nn.params import is_spec
+from repro.optim import adafactor, adamw
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_shapes(shape_name):
+    cfg = get_arch("qwen3-0.6b")
+    sp = input_specs(cfg, shape_name)
+    sh = SHAPES[shape_name]
+    if sh["kind"] in ("train", "prefill"):
+        assert sp["tokens"].shape == (sh["batch"], sh["seq"])
+    else:
+        assert sp["tokens"].shape == (sh["batch"], 1)
+
+
+def test_vlm_gets_vision_stub():
+    cfg = get_arch("llama-3.2-vision-11b")
+    sp = input_specs(cfg, "train_4k")
+    assert sp["vision"].shape == (256, cfg.num_patches, cfg.vision_dim)
+
+
+def test_opt_state_specs_match_real_structure():
+    cfg = get_arch("qwen3-0.6b")
+    p_specs = arch_specs(cfg)
+    abstract = abstract_from_specs(p_specs)
+    for name, opt in (("adamw", adamw(1e-3)), ("adafactor",
+                                               adafactor(1e-2))):
+        want = jax.eval_shape(opt.init, abstract)
+        got = abstract_from_specs(opt_state_specs(name, p_specs))
+        ws = jax.tree.structure(want)
+        gs = jax.tree.structure(got)
+        assert ws == gs, (name, ws, gs)
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_serve_state_specs_build(arch):
+    cfg = get_arch(arch)
+    ss = serve_state_specs(cfg, "decode_32k")
+    leaves = jax.tree.leaves(ss["cache"], is_leaf=is_spec)
+    assert leaves
+
+
+def test_train_state_specs_pod_stacking():
+    cfg = get_arch("qwen3-0.6b")
+    ss = train_state_specs(cfg, n_pod=2, digest_pods=True)
+    leaf = jax.tree.leaves(ss["params"], is_leaf=is_spec)[0]
+    assert leaf.shape[0] == 2 and leaf.axes[0] == "pod_stack"

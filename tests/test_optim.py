@@ -1,0 +1,52 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, clip_by_global_norm,
+                         constant_schedule, sgd, warmup_cosine_schedule)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9),
+    lambda: adamw(0.05), lambda: adafactor(0.5),
+])
+def test_optimizers_minimize_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.asarray([[3.0, -2.0], [1.5, 4.0]]),
+              "b": jnp.asarray([1.0, -1.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    l0 = float(loss(params))
+    for step in range(60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params,
+                                   jnp.asarray(step))
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(1e-2)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    state = opt.init(params)
+    assert state["w"]["row"].shape == (64,)
+    assert state["w"]["col"].shape == (32,)
+    assert state["b"]["v"].shape == (32,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    c = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(c["a"])) - 1.0) < 1e-5
+    g2 = {"a": jnp.full((4,), 0.01)}
+    c2 = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(c2["a"], g2["a"])
+
+
+def test_warmup_cosine():
+    s = warmup_cosine_schedule(1.0, 10, 100)
+    assert 0.0 < float(s(jnp.asarray(0))) <= 0.2
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(s(jnp.asarray(100))) < 0.2
+    assert float(s(jnp.asarray(5))) < float(s(jnp.asarray(10)))

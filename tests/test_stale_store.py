@@ -1,0 +1,38 @@
+"""Stale store (the KVS): push/pull semantics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stale_store
+
+
+def test_push_pull_roundtrip():
+    store = stale_store.init_store(2, 10, 4)
+    local_ids = jnp.asarray([[0, 3, 10], [5, 7, 10]])   # 10 = sentinel pad
+    valid = jnp.asarray([[True, True, False], [True, True, False]])
+    reps = jnp.arange(2 * 2 * 3 * 4, dtype=jnp.float32).reshape(2, 2, 3, 4)
+    store = stale_store.push(store, local_ids, valid, reps)
+    # pull back the pushed rows
+    pulled = stale_store.pull(store, local_ids)
+    np.testing.assert_allclose(np.asarray(pulled)[:, :, :2],
+                               np.asarray(reps)[:, :, :2])
+    # sentinel row must stay zero (padding reads are zeros)
+    assert float(jnp.abs(store[:, 10]).max()) == 0.0
+
+
+def test_pull_shape():
+    store = stale_store.init_store(3, 20, 8)
+    halo = jnp.asarray([[1, 2, 20], [4, 20, 20]])
+    out = stale_store.pull(store, halo)
+    assert out.shape == (2, 3, 3, 8)
+
+
+def test_staleness_error_zero_after_push():
+    store = stale_store.init_store(1, 6, 2)
+    ids = jnp.asarray([[0, 1], [2, 3]])
+    valid = jnp.ones((2, 2), bool)
+    reps = jnp.ones((2, 1, 2, 2))
+    store = stale_store.push(store, ids, valid, reps)
+    eps = stale_store.staleness_error(store, reps, ids, valid)
+    assert float(eps.max()) == 0.0
+    eps2 = stale_store.staleness_error(store, 3 * reps, ids, valid)
+    assert float(eps2.max()) > 0.0
