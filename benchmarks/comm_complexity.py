@@ -1,6 +1,7 @@
-"""§3.3 complexity: per-epoch communication bytes vs mode, N, and depth L."""
+"""§3.3 complexity: per-epoch communication bytes vs mode, N, depth L, and
+HaloExchange wire precision (fp32 / bf16 / int8 + per-row scales)."""
 from benchmarks.common import bench_scale, emit
-from repro.core import epoch_comm_bytes
+from repro.core import HaloPrecision, HaloSpec, epoch_comm_bytes
 from repro.graph import build_partitions, make_dataset
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import param_count
@@ -19,6 +20,20 @@ def run() -> list[dict]:
             b = epoch_comm_bytes(mode, sp, g, pc, 64, L, 10)
             rows.append({"name": f"comm/L={L}/{mode}", "us_per_call": "",
                          "mbytes_per_epoch": round(b / 1e6, 4)})
+        # Wire-precision ablation for the DIGEST pull/push terms.
+        for storage in ("fp32", "bf16", "int8"):
+            prec = HaloPrecision(storage)
+            b = epoch_comm_bytes("digest", sp, g, pc, 64, L, 10,
+                                 halo_precision=prec)
+            spec = HaloSpec.from_partitions(sp, 64, L, prec)
+            sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
+            rows.append({"name": f"comm/L={L}/digest-{storage}",
+                         "us_per_call": "",
+                         "mbytes_per_epoch": round(b / 1e6, 4),
+                         "pull_mb_per_sync": round(
+                             sync["pull_bytes"] / 1e6, 4),
+                         "push_mb_per_sync": round(
+                             sync["push_bytes"] / 1e6, 4)})
     return rows
 
 

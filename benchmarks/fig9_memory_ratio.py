@@ -1,7 +1,14 @@
-"""Fig. 9 (appendix): out-of-subgraph / in-subgraph node ratio — the
-memory overhead of buffering halo representations."""
+"""Fig. 9 (appendix): out-of-subgraph / in-subgraph node ratio — the memory
+overhead of buffering halo representations — plus the compact-vs-dense
+HaloExchange store footprint.  The compact slab is O(|boundary|·L·d)
+(boundary = union of subgraph halos) vs the dense O(N·L·d) array, so the
+reported bytes measure the algorithm, not an implementation artifact."""
 from benchmarks.common import bench_scale, emit
+from repro.core import HaloPrecision, HaloSpec
 from repro.graph import build_partitions, make_dataset
+
+HIDDEN = 64
+LAYERS = 3
 
 
 def run() -> list[dict]:
@@ -11,11 +18,24 @@ def run() -> list[dict]:
         g = make_dataset(ds, scale=0.25 * scale)
         sp = build_partitions(g, 4)
         ratio = sp.halo_ratio()
+        spec = HaloSpec.from_partitions(sp, HIDDEN, LAYERS)
+        spec8 = HaloSpec.from_partitions(sp, HIDDEN, LAYERS,
+                                         HaloPrecision("int8"))
+        dense = spec.dense_nbytes(g.num_nodes)
         rows.append({"name": f"fig9/{ds}",
                      "us_per_call": "",
                      "halo_ratio_mean": round(float(ratio.mean()), 4),
                      "halo_ratio_max": round(float(ratio.max()), 4),
-                     "avg_degree": round(g.num_edges / g.num_nodes, 2)})
+                     "avg_degree": round(g.num_edges / g.num_nodes, 2),
+                     "boundary_frac": round(sp.boundary_fraction(), 4),
+                     "dense_store_mb": round(dense / 1e6, 4),
+                     "compact_fp32_mb": round(spec.store_nbytes() / 1e6, 4),
+                     "compact_int8_mb": round(spec8.store_nbytes() / 1e6,
+                                              4),
+                     "mem_ratio_fp32": round(spec.store_nbytes() / dense,
+                                             4),
+                     "mem_ratio_int8": round(spec8.store_nbytes() / dense,
+                                             4)})
     return rows
 
 

@@ -1,4 +1,5 @@
-from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
-                                         save_checkpoint)
+from repro.checkpoint.checkpoint import (latest_step, read_manifest,
+                                         restore_checkpoint, save_checkpoint)
 
-__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["latest_step", "read_manifest", "restore_checkpoint",
+           "save_checkpoint"]

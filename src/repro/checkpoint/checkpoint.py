@@ -2,7 +2,10 @@
 
 Atomic (write to tmp, rename), step-indexed, restores into an arbitrary
 template pytree (used for both DIGEST GNN training state and the transformer
-train states).
+train states).  Leaf dtypes are preserved by npz, so the compact
+HaloExchange store ({"data": int8/bf16/fp32, "scale": fp32}) round-trips
+its quantized layout byte-for-byte; ``meta`` lets callers record the
+precision config alongside (see ``read_manifest``).
 """
 from __future__ import annotations
 
@@ -24,7 +27,14 @@ def _flatten_with_paths(tree: Pytree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_fmt(p) for p in path)
-        flat[key] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":
+            # ml_dtypes extension types (bfloat16 etc.) round-trip through
+            # npz as raw void bytes that np can't cast back; store as f32
+            # (lossless widening) and let restore narrow to the template
+            # dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
     return flat
 
 
@@ -38,10 +48,13 @@ def _fmt(entry) -> str:
     return str(entry)
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree) -> str:
+def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
+                    meta: Optional[dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten_with_paths(tree)
     manifest = {"step": int(step), "keys": sorted(flat)}
+    if meta:
+        manifest["meta"] = meta
     path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     os.close(fd)
@@ -55,6 +68,11 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree) -> str:
     with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json"), "w") as f:
         json.dump(manifest, f)
     return path
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

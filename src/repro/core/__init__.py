@@ -7,6 +7,8 @@ from repro.core.async_engine import (AsyncSettings, digest_a_train,
 from repro.core.error_bound import measure_error_and_bound
 from repro.core.comm_model import (CommConstants, epoch_comm_bytes,
                                    epoch_time_model, khop_halo_sizes)
+from repro.core import halo_exchange
+from repro.core.halo_exchange import HaloPrecision, HaloSpec
 from repro.core import stale_store
 
 __all__ = [
@@ -14,5 +16,6 @@ __all__ = [
     "full_graph_forward", "init_state", "make_epoch_fn",
     "prepare_graph_data", "AsyncSettings", "digest_a_train",
     "sync_time_per_round", "measure_error_and_bound", "CommConstants",
-    "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes", "stale_store",
+    "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes",
+    "halo_exchange", "HaloPrecision", "HaloSpec", "stale_store",
 ]

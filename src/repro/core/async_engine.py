@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stale_store
+from repro.core import halo_exchange
 from repro.core.digest import evaluate, make_subgraph_loss
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import init_params
@@ -39,6 +39,7 @@ class AsyncSettings:
     worker_speed_jitter: float = 0.15        # lognormal jitter of speeds
     straggler: Optional[int] = None          # worker index to slow down
     straggler_delay: tuple[float, float] = (8.0, 10.0)  # paper §5.2
+    precision: halo_exchange.HaloPrecision = halo_exchange.HaloPrecision()
     seed: int = 0
 
 
@@ -58,8 +59,9 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
     opt_state = opt.init(params)
-    num_nodes = int(data["x_global"].shape[0] - 1)
-    store = stale_store.init_store(L1, num_nodes, cfg.hidden_dim)
+    num_slots = int(data["store_ids"].shape[0]) - 1
+    store = halo_exchange.init_store(L1, num_slots, cfg.hidden_dim,
+                                     settings.precision)
     halo_cache = [jnp.zeros((L1, H, cfg.hidden_dim), jnp.float32)
                   for _ in range(M)]
 
@@ -78,8 +80,9 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         return opt.update(grads, opt_state, params, step)
 
     @jax.jit
-    def push_rows(store, ids, valid, reps):
-        return stale_store.push(store, ids[None], valid[None], reps[None])
+    def push_rows(store, slots, valid, reps):
+        return halo_exchange.push(store, slots[None], valid[None],
+                                  reps[None])
 
     x_local_all = np.asarray(data["x_global"])[np.asarray(data["local_ids"])]
     x_halo_all = np.asarray(data["x_global"])[np.asarray(data["halo_ids"])]
@@ -111,10 +114,11 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         worker_round[m] += 1
         r = worker_round[m]
 
-        # Periodic PULL from the shared store (non-blocking read).
+        # Periodic PULL from the shared compact store (non-blocking read;
+        # dequantized into this worker's private fp32 table).
         if r % settings.sync_interval == 0:
-            halo_cache[m] = stale_store.pull(
-                store, data["halo_ids"][m][None])[0]
+            halo_cache[m] = halo_exchange.pull(
+                store, data["halo_slots"][m][None])[0]
 
         struct_m = {k: v[m] for k, v in data["struct"].items()}
         loss, grads, push = worker_grad(
@@ -127,9 +131,9 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         params, opt_state = apply_update(params, opt_state, grads, step)
         step = step + 1
 
-        # Periodic PUSH of fresh representations.
+        # Periodic PUSH of fresh representations (boundary rows only).
         if (r - 1) % settings.sync_interval == 0 and cfg.num_layers > 1:
-            store = push_rows(store, data["local_ids"][m],
+            store = push_rows(store, data["local_slots"][m],
                               data["local_valid"][m], push)
 
         # Fetch fresh params, schedule next round.

@@ -15,9 +15,11 @@ paper can be modeled by swapping constants.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
+from repro.core.halo_exchange import HaloPrecision
 from repro.graph.graph import Graph
 from repro.graph.partition import StackedPartitions
 
@@ -58,7 +60,13 @@ def khop_halo_sizes(g: Graph, sp: StackedPartitions, k_max: int
 def epoch_comm_bytes(mode: str, sp: StackedPartitions, g: Graph,
                      param_count: int, hidden: int, num_layers: int,
                      sync_interval: int = 10,
-                     consts: CommConstants = CommConstants()) -> float:
+                     consts: CommConstants = CommConstants(),
+                     halo_precision: Optional[HaloPrecision] = None
+                     ) -> float:
+    """Per-epoch wire bytes.  ``halo_precision`` (digest only) swaps the
+    §3.3 pull/push terms onto the HaloExchange wire format: compact
+    boundary rows in fp32/bf16/int8(+scale) instead of dense fp32 — the
+    2–4× reduction reported by ``benchmarks/comm_complexity.py``."""
     B = consts.bytes_per_scalar
     M = sp.num_parts
     params_bytes = 2.0 * M * param_count * B           # broadcast + reduce
@@ -68,8 +76,13 @@ def epoch_comm_bytes(mode: str, sp: StackedPartitions, g: Graph,
     halo1 = sp.halo_valid.sum(axis=1).astype(np.float64)       # (M,)
     local = sp.local_valid.sum(axis=1).astype(np.float64)
     if mode == "digest":
-        pull = float(halo1.sum()) * hidden * L1 * B
-        push = float(local.sum()) * hidden * L1 * B
+        if halo_precision is not None:
+            rb = halo_precision.row_bytes(hidden)
+            pull = float(sp.pull_rows()) * L1 * rb
+            push = float(sp.push_rows()) * L1 * rb
+        else:
+            pull = float(halo1.sum()) * hidden * L1 * B
+            push = float(local.sum()) * hidden * L1 * B
         return params_bytes + (pull + push) / sync_interval
     if mode == "propagation":
         khop = khop_halo_sizes(g, sp, L1) if L1 else np.zeros((M, 0))

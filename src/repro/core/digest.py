@@ -11,6 +11,12 @@ One code path implements all three framework families the paper compares
 The epoch function is a single jitted SPMD program: subgraphs are vmapped on
 CPU and sharded over the mesh "data" axis under pjit (see
 repro.launch.train_gnn), which is the Algorithm-1 `for m in parallel` loop.
+
+Stale state lives in the compact HaloExchange store (boundary rows only,
+pluggable fp32/bf16/int8 precision — see repro.core.halo_exchange).  On
+non-pull epochs the out-of-subgraph aggregation reads the cached compact
+slab *directly* through the fused pull+aggregate kernel; the seed's
+materialized ``(M, L-1, H, hidden)`` per-epoch halo cache is gone.
 """
 from __future__ import annotations
 
@@ -23,10 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stale_store
+from repro.core import halo_exchange
+from repro.core.halo_exchange import HaloPrecision
 from repro.graph.graph import Graph
 from repro.graph.partition import StackedPartitions, build_partitions
-from repro.models.gnn import GNNConfig, gnn_forward, gnn_specs
+from repro.models.gnn import (GNNConfig, gnn_forward, gnn_specs, halo_ref)
 from repro.nn import init_params, micro_f1, softmax_cross_entropy
 from repro.optim import Optimizer
 
@@ -51,7 +58,11 @@ def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
         return {"in_nbr": jnp.asarray(s.in_nbr),
                 "in_wts": jnp.asarray(s.in_wts),
                 "out_nbr": jnp.asarray(s.out_nbr),
-                "out_wts": jnp.asarray(s.out_wts)}
+                "out_wts": jnp.asarray(s.out_wts),
+                # Same out-ELL remapped to compact-store slots / global
+                # ids, so aggregation can gather from shared slabs.
+                "out_nbr_s": jnp.asarray(s.out_nbr_store),
+                "out_nbr_g": jnp.asarray(s.out_nbr_global)}
 
     return {
         "x_global": jnp.asarray(x_global),
@@ -59,6 +70,10 @@ def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
         "local_ids": jnp.asarray(sp.local_ids),
         "local_valid": jnp.asarray(sp.local_valid),
         "halo_ids": jnp.asarray(sp.halo_ids),
+        # Compact-store views (HaloExchange slot space).
+        "local_slots": jnp.asarray(sp.local_slots),
+        "halo_slots": jnp.asarray(sp.halo_slots),
+        "store_ids": jnp.asarray(sp.store_ids),
         "labels": jnp.asarray(sp.labels),
         "train_mask": jnp.asarray(sp.train_mask),
         "val_mask": jnp.asarray(sp.val_mask),
@@ -122,6 +137,8 @@ class TrainSettings:
     sync_interval: int = 10          # N of Algorithm 1
     mode: str = "digest"
     pull_on_first_epoch: bool = False  # paper pulls only at r % N == 0
+    # Wire/storage precision of the HaloExchange store (§3.3 byte counts).
+    precision: HaloPrecision = HaloPrecision()
     # LLCG-style server correction (for the partition-based baseline): one
     # extra server-side gradient step per round on a sampled node batch
     # with FULL neighbor information [Ramezani et al. 2021].
@@ -138,46 +155,63 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings
 
     def epoch_fn(state: dict, data: dict) -> tuple[dict, dict]:
         r = state["epoch"] + 1            # 1-indexed, as in Algorithm 1
-        x_halo0 = data["x_global"][data["halo_ids"]]        # (M, H, d)
-        M = data["halo_ids"].shape[0]
-        H = data["halo_ids"].shape[1]
-
+        x_global = data["x_global"]                         # (N+1, d)
+        struct = data["struct"]
+        # Layer-0 halo features as a compact boundary slab (B+1, d): every
+        # out-edge target is a boundary node, so out_nbr_s addresses this
+        # slab too and table-wide work (e.g. GAT's projection) stays
+        # O(|boundary|), not O(N).  Row B inherits x_global's zero
+        # sentinel.  The partition baseline drops cross-subgraph
+        # information by zeroing the halo *tables* (this slab; the stale
+        # slab below stays at its zero init), NOT the ELL weights — GAT's
+        # attention denominator and SAGE's mean still see the dropped
+        # neighbors as zero vectors, matching the seed semantics exactly.
+        x_halo_slab = x_global[data["store_ids"]]           # (B+1, d)
         if settings.mode == "partition":
-            halo_cache = jnp.zeros_like(state["halo_cache"])
-            x_halo0 = jnp.zeros_like(x_halo0)
-        elif settings.mode == "propagation":
-            # Fresh exchange every epoch: exact reps at current params.
+            x_halo_slab = jnp.zeros_like(x_halo_slab)
+
+        # The stale slab feeding this epoch's out-of-subgraph products —
+        # compact (L-1, B+1, hid) in storage precision, never expanded to
+        # a per-subgraph (M, L-1, H, hid) cache.
+        if settings.mode == "propagation" and cfg.num_layers > 1:
+            # Fresh exchange every epoch: exact reps at current params,
+            # gathered down to the boundary slab.
             _, reps = full_graph_forward(cfg, state["params"], data)
-            fresh = jnp.stack(
-                [jnp.concatenate(
-                    [rep, jnp.zeros((1, rep.shape[-1]), rep.dtype)], 0)
-                 for rep in reps])                        # (L-1, N+1, hid)
-            halo_cache = jnp.swapaxes(
-                fresh[:, data["halo_ids"], :], 0, 1)      # (M, L-1, H, hid)
-        else:  # digest
+            ids = jnp.clip(data["store_ids"], 0, reps[0].shape[0] - 1)
+            slab = jnp.stack([rep[ids] for rep in reps])  # (L-1, B+1, hid)
+            slab = slab.at[:, -1, :].set(0.0)             # zero sentinel
+            q, sc = halo_exchange.quantize_rows(slab, settings.precision)
+            cache = {"data": q} if sc is None else {"data": q, "scale": sc}
+        elif settings.mode == "digest":
             do_pull = (r % settings.sync_interval == 0)
             if settings.pull_on_first_epoch:
                 do_pull = do_pull | (r == 1)
-            halo_cache = jax.lax.cond(
-                do_pull,
-                lambda: stale_store.pull(state["store"], data["halo_ids"]),
-                lambda: state["halo_cache"])
+            # PULL = snapshot the compact store (O(B·L·d) copy).
+            cache = jax.lax.cond(do_pull, lambda: state["store"],
+                                 lambda: state["cache"])
+        else:
+            cache = state["cache"]
 
-        x_local = data["x_global"][data["local_ids"]]       # (M, S, d)
+        x_local = x_global[data["local_ids"]]               # (M, S, d)
+        n_hidden = cfg.num_layers - 1
 
-        def per_subgraph_tables(m_cache):
-            # m_cache: (L-1, H, hid) → list of per-layer tables
-            return [m_cache[i] for i in range(cfg.num_layers - 1)]
-
-        def sub_loss(params, x_loc, x_h0, m_cache, struct, labels, mask):
-            tables = [x_h0] + per_subgraph_tables(m_cache)
-            return loss_fn(params, x_loc, tables, struct, labels, mask)
+        def sub_loss(params, x_loc, struct_m, labels, mask):
+            # Layer 0 gathers raw halo features from the boundary feature
+            # slab; layers ℓ≥1 gather stale reps straight from the compact
+            # store slab — both via the fused pull+aggregate path.
+            tables = [halo_ref(x_halo_slab, None, struct_m["out_nbr_s"],
+                               struct_m["out_wts"])]
+            for ell in range(n_hidden):
+                tables.append(halo_ref(
+                    *halo_exchange.layer_table(cache, ell),
+                    struct_m["out_nbr_s"], struct_m["out_wts"]))
+            return loss_fn(params, x_loc, tables, struct_m, labels, mask)
 
         vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
-                      in_axes=(None, 0, 0, 0, 0, 0, 0))
+                      in_axes=(None, 0, 0, 0, 0))
         (losses, (push_reps, logits)), grads = vg(
-            state["params"], x_local, x_halo0, halo_cache,
-            data["struct"], data["labels"], data["train_mask"])
+            state["params"], x_local, struct,
+            data["labels"], data["train_mask"])
 
         # Global AGG (Algorithm 1 line 13): uniform average over subgraphs.
         mean_grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
@@ -209,19 +243,20 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings
         eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
         if settings.mode == "digest" and cfg.num_layers > 1:
             do_push = ((r - 1) % settings.sync_interval == 0)
-            eps = stale_store.staleness_error(
-                state["store"], push_reps, data["local_ids"],
+            eps = halo_exchange.staleness_error(
+                state["store"], push_reps, data["local_slots"],
                 data["local_valid"])
             new_store = jax.lax.cond(
                 do_push,
-                lambda: stale_store.push(state["store"], data["local_ids"],
-                                         data["local_valid"], push_reps),
+                lambda: halo_exchange.push(
+                    state["store"], data["local_slots"],
+                    data["local_valid"], push_reps),
                 lambda: state["store"])
 
         train_acc = micro_f1(logits, data["labels"],
                              data["train_mask"].astype(jnp.float32))
         new_state = {"params": params, "opt_state": opt_state,
-                     "store": new_store, "halo_cache": halo_cache,
+                     "store": new_store, "cache": cache,
                      "epoch": r, "step": state["step"] + 1}
         metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
                    "staleness_eps": eps}
@@ -234,19 +269,20 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings
 # State init + high-level training loop
 # ---------------------------------------------------------------------------
 
-def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0
-               ) -> dict:
+def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0,
+               precision: HaloPrecision = HaloPrecision()) -> dict:
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
-    num_nodes = int(data["x_global"].shape[0] - 1)
-    M, H = data["halo_ids"].shape
-    store = stale_store.init_store(max(cfg.num_layers - 1, 1), num_nodes,
-                                   cfg.hidden_dim)
+    num_slots = int(data["store_ids"].shape[0]) - 1
+    l1 = max(cfg.num_layers - 1, 1)
     return {
         "params": params,
         "opt_state": opt.init(params),
-        "store": store,
-        "halo_cache": jnp.zeros((M, max(cfg.num_layers - 1, 1), H,
-                                 cfg.hidden_dim), jnp.float32),
+        # Authoritative compact store + the last pulled snapshot of it
+        # (both O(|boundary|·L·d); the seed kept an O(M·H·L·d) cache).
+        "store": halo_exchange.init_store(l1, num_slots, cfg.hidden_dim,
+                                          precision),
+        "cache": halo_exchange.init_store(l1, num_slots, cfg.hidden_dim,
+                                          precision),
         "epoch": jnp.asarray(0, jnp.int32),
         "step": jnp.asarray(0, jnp.int32),
     }
@@ -269,7 +305,8 @@ def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
                  eval_every: int = 10, seed: int = 0,
                  verbose: bool = False) -> tuple[dict, dict]:
     """Run training; returns (final_state, history dict of lists)."""
-    state = init_state(cfg, opt, data, seed=seed)
+    state = init_state(cfg, opt, data, seed=seed,
+                       precision=settings.precision)
     epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings))
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
     hist: dict[str, list] = {"epoch": [], "loss": [], "train_f1": [],

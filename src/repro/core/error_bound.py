@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stale_store
+from repro.core import halo_exchange
 from repro.core.digest import full_graph_forward, make_subgraph_loss
 from repro.models.gnn import GNNConfig
 
@@ -59,10 +59,11 @@ def fresh_halo_cache(cfg: GNNConfig, params: Pytree, data: dict
 
 
 def measure_error_and_bound(cfg: GNNConfig, params: Pytree, data: dict,
-                            store: jax.Array) -> dict:
-    """Compare the DIGEST gradient (stale halo from `store`) against the
-    exact gradient (fresh halo), and evaluate the Theorem-1 bound."""
-    stale_cache = stale_store.pull(store, data["halo_ids"])
+                            store: dict) -> dict:
+    """Compare the DIGEST gradient (stale halo from the compact HaloExchange
+    `store`) against the exact gradient (fresh halo), and evaluate the
+    Theorem-1 bound."""
+    stale_cache = halo_exchange.pull(store, data["halo_slots"])
     fresh_cache = fresh_halo_cache(cfg, params, data)
 
     g_stale = _grads(cfg, params, data, stale_cache)

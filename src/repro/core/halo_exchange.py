@@ -1,0 +1,235 @@
+"""HaloExchange — DIGEST's stale-representation KVS, compact and precision-aware.
+
+This subsystem implements the PUSH/PULL lines of Algorithm 1 over a
+**compact** slab that holds only *boundary* nodes — rows that appear in at
+least one subgraph's halo — instead of the dense ``(L-1, N+1, hidden)``
+array the seed used.  Mapping to the paper:
+
+  * Algorithm 1 line 9–10 (``PUSH h_v^(ℓ) for v ∈ V_m``)  →  :func:`push`:
+    quantize + scatter of locally-owned *boundary* rows into the slab.
+    Non-boundary local rows are dropped — no other subgraph ever reads
+    them, so storing them is pure overhead (this is what shrinks the store
+    from O(N·L·d) to O(|boundary|·L·d), the Fig. 9 memory term).
+  * Algorithm 1 line 5 (``PULL h̃_u^(ℓ) for u ∈ halo(G_m)``)  →
+    :func:`pull` (dense gather + dequantize), or — on the TPU hot path —
+    the fused pull+aggregate kernel :func:`repro.kernels.spmm.halo_spmm`,
+    which gathers slab rows directly inside the out-of-subgraph ELL
+    product so no ``(M, L-1, H, hidden)`` halo cache is ever materialized.
+  * §3.3 communication terms  →  :meth:`HaloSpec.comm_bytes`: the per-sync
+    pull cost is ``Σ_m |halo(G_m)| · (L-1) · row_bytes`` and the push cost
+    ``Σ_m |boundary ∩ V_m| · (L-1) · row_bytes`` where ``row_bytes``
+    depends on the wire/storage precision below.
+  * Theorem 1's per-layer staleness ε^(ℓ)  →  :func:`staleness_error`,
+    measured over the rows actually served to other subgraphs.
+
+Precision (:class:`HaloPrecision`) is pluggable and applies to both the
+slab layout (storage) and the §3.3 wire format:
+
+  ======  ==================================  ==========================
+  mode    row encoding                        bytes / hidden value
+  ======  ==================================  ==========================
+  fp32    float32                             4
+  bf16    bfloat16                            2
+  int8    int8 + one float32 scale per row    1 (+ 4 / hidden amortized)
+  ======  ==================================  ==========================
+
+int8 uses symmetric per-row quantization: ``scale = max|row| / 127``,
+``q = round(row / scale)``; the absolute dequantization error is bounded
+by ``scale / 2 = max|row| / 254`` per element.
+
+A store is a plain pytree (dict) so it drops into jitted state, pjit
+shardings and npz checkpoints unchanged:
+
+    {"data": (L-1, B+1, hidden) <storage dtype>}        fp32 / bf16
+    {"data": int8 ..., "scale": (L-1, B+1, 1) float32}  int8
+
+Row ``B`` is the zero sentinel: pushes of padding (and of non-boundary
+local rows, whose slot index is ``B``) are routed there and the row is
+re-zeroed, so pulls of padded halo slots are exactly zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+PRECISIONS = ("fp32", "bf16", "int8")
+
+_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+_VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloPrecision:
+    """Wire/storage precision of the halo slab (one knob for both)."""
+
+    storage: str = "fp32"          # fp32 | bf16 | int8
+
+    def __post_init__(self):
+        if self.storage not in PRECISIONS:
+            raise ValueError(f"storage {self.storage!r} not in {PRECISIONS}")
+
+    @property
+    def dtype(self):
+        return _DTYPES[self.storage]
+
+    @property
+    def has_scale(self) -> bool:
+        return self.storage == "int8"
+
+    def row_bytes(self, hidden: int) -> int:
+        """Bytes to store/ship one node-layer row of width ``hidden``."""
+        extra = 4 if self.has_scale else 0       # one fp32 scale per row
+        return hidden * _VALUE_BYTES[self.storage] + extra
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    """Static shape/precision metadata of a compact store (accounting)."""
+
+    num_hidden_layers: int          # L-1
+    num_slots: int                  # |boundary| (excl. sentinel)
+    hidden: int
+    precision: HaloPrecision = HaloPrecision()
+
+    @classmethod
+    def from_partitions(cls, sp, hidden: int, num_layers: int,
+                        precision: HaloPrecision = HaloPrecision()
+                        ) -> "HaloSpec":
+        return cls(num_hidden_layers=max(num_layers - 1, 1),
+                   num_slots=sp.num_boundary, hidden=hidden,
+                   precision=precision)
+
+    def init(self) -> dict:
+        return init_store(self.num_hidden_layers, self.num_slots,
+                          self.hidden, self.precision)
+
+    # -- §3.3 / Fig. 9 accounting ------------------------------------------
+    def store_nbytes(self) -> int:
+        """HBM bytes of the compact slab (incl. sentinel row)."""
+        return (self.num_hidden_layers * (self.num_slots + 1)
+                * self.precision.row_bytes(self.hidden))
+
+    def dense_nbytes(self, num_nodes: int) -> int:
+        """What the seed's dense fp32 ``(L-1, N+1, hidden)`` store costs."""
+        return self.num_hidden_layers * (num_nodes + 1) * self.hidden * 4
+
+    def comm_bytes(self, pull_rows: int, push_rows: int) -> dict:
+        """Per-sync §3.3 byte counts under the configured wire precision.
+
+        pull_rows: Σ_m |halo(G_m)| — rows gathered by all subgraphs.
+        push_rows: Σ_m |boundary ∩ V_m| — rows scattered by all subgraphs.
+        """
+        rb = self.precision.row_bytes(self.hidden)
+        pull = int(pull_rows) * self.num_hidden_layers * rb
+        push = int(push_rows) * self.num_hidden_layers * rb
+        return {"pull_bytes": pull, "push_bytes": push,
+                "total_bytes": pull + push}
+
+
+def precision_of(store: dict) -> HaloPrecision:
+    if "scale" in store:
+        return HaloPrecision("int8")
+    if store["data"].dtype == jnp.bfloat16:
+        return HaloPrecision("bf16")
+    return HaloPrecision("fp32")
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x: jax.Array, precision: HaloPrecision
+                  ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Encode fp32 rows (..., hidden) into (data, scale-or-None)."""
+    if precision.storage == "fp32":
+        return x.astype(jnp.float32), None
+    if precision.storage == "bf16":
+        return x.astype(jnp.bfloat16), None
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_rows(data: jax.Array, scale: Optional[jax.Array]
+                    ) -> jax.Array:
+    out = data.astype(jnp.float32)
+    return out if scale is None else out * scale
+
+
+# ---------------------------------------------------------------------------
+# The KVS operations (compact-slot indexed)
+# ---------------------------------------------------------------------------
+
+def init_store(num_hidden_layers: int, num_slots: int, hidden: int,
+               precision: HaloPrecision = HaloPrecision()) -> dict:
+    """Zero slab; (L-1, B+1, hidden) with the sentinel row at B."""
+    store = {"data": jnp.zeros((num_hidden_layers, num_slots + 1, hidden),
+                               precision.dtype)}
+    if precision.has_scale:
+        store["scale"] = jnp.ones((num_hidden_layers, num_slots + 1, 1),
+                                  jnp.float32)
+    return store
+
+
+def layer_table(store: dict, ell: int
+                ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """(data, scale) slab of hidden layer ``ell`` — feeds the fused kernel."""
+    return store["data"][ell], (store["scale"][ell] if "scale" in store
+                                else None)
+
+
+def pull(store: dict, slots: jax.Array) -> jax.Array:
+    """Gather + dequantize stale halo tables (Algorithm 1 line 5).
+
+    slots: (M, H) compact slot ids (sentinel B at padding).
+    Returns (M, L-1, H, hidden) float32.
+    """
+    out = store["data"][:, slots, :].astype(jnp.float32)   # (L-1, M, H, h)
+    if "scale" in store:
+        out = out * store["scale"][:, slots, :]
+    return jnp.swapaxes(out, 0, 1)
+
+
+def push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
+         reps: jax.Array) -> dict:
+    """Quantize + scatter fresh local boundary rows (Algorithm 1 lines 9–10).
+
+    local_slots: (M, S) compact slot ids — ``B`` for padding *and* for
+      non-boundary local nodes (both are dropped via the sentinel row).
+    local_valid: (M, S) bool; reps: (M, L-1, S, hidden) fp32.
+    """
+    data = store["data"]
+    l1, rows, hidden = data.shape
+    b = rows - 1
+    m, s = local_slots.shape
+    ids = jnp.where(local_valid, local_slots, b).reshape(-1)
+    vals = jnp.where(local_valid[:, None, :, None], reps, 0.0)
+    q, scale = quantize_rows(vals, precision_of(store))
+    q = jnp.swapaxes(q, 0, 1).reshape(l1, m * s, hidden)
+    new = {"data": data.at[:, ids, :].set(q).at[:, b, :].set(0)}
+    if scale is not None:
+        scale = jnp.swapaxes(scale, 0, 1).reshape(l1, m * s, 1)
+        new["scale"] = (store["scale"].at[:, ids, :].set(scale)
+                        .at[:, b, :].set(1.0))
+    return new
+
+
+def staleness_error(store: dict, fresh: jax.Array, local_slots: jax.Array,
+                    local_valid: jax.Array) -> jax.Array:
+    """ε^(ℓ) = max_v ‖h_v^(ℓ) − h̃_v^(ℓ)‖₂ over *served* (boundary) rows.
+
+    fresh: (M, L-1, S, hidden) this epoch's representations.
+    Returns (L-1,) per-hidden-layer max error.  Only rows present in the
+    compact store participate — exactly the rows whose staleness other
+    subgraphs can observe (Theorem 1 only involves pulled halo rows).
+    """
+    b = store["data"].shape[1] - 1
+    stale = pull(store, local_slots)                   # (M, L-1, S, h)
+    diff = jnp.linalg.norm(fresh - stale, axis=-1)     # (M, L-1, S)
+    served = local_valid & (local_slots < b)
+    diff = jnp.where(served[:, None, :], diff, 0.0)
+    return jnp.max(diff, axis=(0, 2))

@@ -1,19 +1,17 @@
-"""The stale-representation store — DIGEST's "KVS", TPU-native.
+"""DENSE REFERENCE stale store — the oracle for HaloExchange parity tests.
 
-The paper keeps per-node hidden representations in a host shared-memory KVS
-(Plasma).  Our TPU-native equivalent is a global array
+Production consumers have migrated to :mod:`repro.core.halo_exchange`,
+which keeps a *compact* precision-aware slab of boundary rows only.  This
+module retains the seed's dense formulation
 
     store: (L-1, N+1, hidden)   # row N is the zero sentinel
 
-resident in HBM and shardable node-wise over the mesh "data" axis.  The two
-KVS operations become:
-
-  * ``pull(store, halo_ids)``  → gather of halo rows (an all-gather of remote
-    shards when sharded; node-level parallel I/O is inherent).
-  * ``push(store, local_ids, reps)`` → scatter of locally-owned rows (pure
-    local write under node-wise sharding — the *pull* side pays the wire).
-
-Both are O(|halo| · L · d) per sync — the paper's §3.3 communication terms.
+indexed by **global node id**, purely as the easy-to-audit reference
+semantics: ``pull``/``push``/``staleness_error`` here and in
+``halo_exchange`` must agree bitwise at fp32 on every row the compact
+store serves (see ``tests/test_stale_store.py``).  Do not add new
+consumers — the dense layout is O(N·L·d) HBM per replica, which is exactly
+the implementation artifact the compact store removes.
 """
 from __future__ import annotations
 

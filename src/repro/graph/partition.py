@@ -93,6 +93,12 @@ class StackedPartitions:
     """All M subgraphs padded to identical sizes and stacked on axis 0.
 
     Sentinel id == num_nodes (a zero row is appended to every global table).
+
+    Boundary / compact-store views: the **boundary set** is the union of
+    all subgraph halos — the only rows the stale store ever serves.  The
+    global→slot map (``store_map``) lets the HaloExchange subsystem keep a
+    compact ``(L-1, |boundary|+1, hidden)`` slab instead of a dense
+    ``(L-1, N+1, hidden)`` array; slot ``num_boundary`` is the sentinel.
     """
 
     num_nodes: int
@@ -109,6 +115,14 @@ class StackedPartitions:
     train_mask: np.ndarray   # (M, S) bool (False at padding)
     val_mask: np.ndarray     # (M, S) bool
     test_mask: np.ndarray    # (M, S) bool
+    # Compact-store (boundary) indexing, emitted for HaloExchange.
+    store_map: np.ndarray    # (N+1,) int32 global id → slot or B sentinel
+    store_ids: np.ndarray    # (B+1,) int32 slot → global id, [B] == N
+    halo_slots: np.ndarray   # (M, H) int32 store slot of each halo entry
+    local_slots: np.ndarray  # (M, S) int32 store slot of each local row
+                             #   (B where the local node is not boundary)
+    out_nbr_store: np.ndarray   # (M, S, Dout) int32 → store slot or B
+    out_nbr_global: np.ndarray  # (M, S, Dout) int32 → global id or N
 
     @property
     def part_size(self) -> int:
@@ -118,10 +132,27 @@ class StackedPartitions:
     def halo_size(self) -> int:
         return self.halo_ids.shape[1]
 
+    @property
+    def num_boundary(self) -> int:
+        return len(self.store_ids) - 1
+
     def halo_ratio(self) -> np.ndarray:
         """Paper Fig. 9 metric: |out-of-subgraph| / |in-subgraph| per part."""
         return (self.halo_valid.sum(axis=1)
                 / np.maximum(self.local_valid.sum(axis=1), 1))
+
+    def boundary_fraction(self) -> float:
+        """|boundary| / N — the compact-vs-dense store row ratio."""
+        return self.num_boundary / max(self.num_nodes, 1)
+
+    def push_rows(self) -> int:
+        """Σ_m |boundary ∩ V_m| — rows shipped per PUSH sync (§3.3)."""
+        return int((self.local_valid
+                    & (self.local_slots < self.num_boundary)).sum())
+
+    def pull_rows(self) -> int:
+        """Σ_m |halo(G_m)| — rows shipped per PULL sync (§3.3)."""
+        return int(self.halo_valid.sum())
 
 
 def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
@@ -206,9 +237,35 @@ def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
         va[m, :len(loc)] = g.val_mask[loc]
         te[m, :len(loc)] = g.test_mask[loc]
 
+    # Boundary set = union of all halos; global→compact-slot map for the
+    # HaloExchange store (slot B is the sentinel, like id n globally).
+    boundary = (np.unique(np.concatenate(parts_halo))
+                if any(len(h) for h in parts_halo)
+                else np.empty(0, np.int32)).astype(np.int32)
+    B = len(boundary)
+    store_map = np.full(n + 1, B, np.int32)
+    store_map[boundary] = np.arange(B, dtype=np.int32)
+    store_ids = np.concatenate([boundary, [n]]).astype(np.int32)
+    halo_slots = store_map[halo_ids]
+    local_slots = store_map[local_ids]
+
+    # Per-part remaps of the out-ELL: halo-slot → store-slot / global id,
+    # so the out-of-subgraph product can gather straight from the shared
+    # compact slab (or from x_global for layer 0) with no per-part table.
+    out_nbr_store = np.empty_like(out_nbr)
+    out_nbr_global = np.empty_like(out_nbr)
+    for m in range(num_parts):
+        ext_s = np.concatenate([halo_slots[m], [B]]).astype(np.int32)
+        ext_g = np.concatenate([halo_ids[m], [n]]).astype(np.int32)
+        out_nbr_store[m] = ext_s[out_nbr[m]]
+        out_nbr_global[m] = ext_g[out_nbr[m]]
+
     return StackedPartitions(
         num_nodes=n, num_parts=num_parts,
         local_ids=local_ids, local_valid=local_valid,
         halo_ids=halo_ids, halo_valid=halo_valid,
         in_nbr=in_nbr, in_wts=in_wts, out_nbr=out_nbr, out_wts=out_wts,
-        labels=labels, train_mask=tr, val_mask=va, test_mask=te)
+        labels=labels, train_mask=tr, val_mask=va, test_mask=te,
+        store_map=store_map, store_ids=store_ids,
+        halo_slots=halo_slots, local_slots=local_slots,
+        out_nbr_store=out_nbr_store, out_nbr_global=out_nbr_global)

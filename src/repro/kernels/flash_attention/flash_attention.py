@@ -108,7 +108,9 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        # jax ≥ 0.7 renamed TPUCompilerParams → CompilerParams; support both.
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                getattr(pltpu, "TPUCompilerParams", None))(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused halo pull + aggregate over the compact slab.
+
+Computes the out-of-subgraph side of DIGEST's Eq. 5
+
+    out[i] = sum_k wts[i, k] * dequant(slab[nbr[i, k]])
+
+where ``slab`` is the HaloExchange compact store layer — fp32, bf16, or
+int8 with per-row fp32 scales — and ``nbr`` holds *compact-store slot*
+indices (sentinel == slab.shape[0]-1, a zero row).  Fusing the gather into
+the ELL product means the non-pull epochs of Algorithm 1 never materialize
+the ``(M, L-1, H, hidden)`` halo cache the seed implementation kept: each
+row block reads exactly the slab rows its edges touch, and int8 rows are
+dequantized in-register (VMEM traffic shrinks by the same 2–4× as the
+§3.3 wire format).
+
+Grid/block design matches ``spmm.py``: grid = (row_blocks, feature_blocks),
+the slab carried per feature-block into VMEM — int8 slabs fit 4× more rows
+in the same VMEM budget.  Per-row scales ride along as a (rows, 1) fp32
+column and are folded into the edge weight (``w · scale[idx]``) before the
+FMA, so the inner loop stays a gather + single fused multiply-add.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.spmm.spmm import BLOCK_F, BLOCK_ROWS, spmm_pallas
+
+
+def _halo_kernel_scaled(nbr_ref, wts_ref, data_ref, scale_ref, out_ref):
+    deg = nbr_ref.shape[1]
+    table = data_ref[...]                        # (rows_tab, BF) int8
+    scale = scale_ref[...][:, 0]                 # (rows_tab,) fp32
+
+    def body(k, acc):
+        idx = nbr_ref[:, k]
+        gathered = jnp.take(table, idx, axis=0).astype(jnp.float32)
+        # Fold the per-row dequant scale into the edge weight: one FMA.
+        w = wts_ref[:, k].astype(jnp.float32) * jnp.take(scale, idx, axis=0)
+        return acc + w[:, None] * gathered
+
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    acc = jax.lax.fori_loop(0, deg, body, acc)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def halo_spmm_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
+                     scale: jax.Array = None,
+                     interpret: bool = True) -> jax.Array:
+    """Fused pull+aggregate via pallas_call.
+
+    Args:
+      nbr:   (rows, deg) int32 — compact-store slot ids (< data.shape[0]).
+      wts:   (rows, deg) float — 0 at padding slots.
+      data:  (n_slots_padded, feat) slab incl. sentinel row (fp32/bf16/int8).
+      scale: optional (n_slots_padded, 1) fp32 per-row dequant scales.
+    Returns:
+      (rows, feat) float32 result.
+    """
+    if scale is None:
+        # Unscaled fp32/bf16 slabs are exactly the ELL SpMM (its inner
+        # loop already upcasts gathered rows to f32); one kernel body to
+        # keep in sync for future block/DMA changes.
+        return spmm_pallas(nbr, wts, data, interpret=interpret)
+    rows, deg = nbr.shape
+    n_tab, feat = data.shape
+    br = min(BLOCK_ROWS, rows)
+    bf = min(BLOCK_F, feat)
+    if rows % br or feat % bf:
+        raise ValueError(f"rows={rows} feat={feat} must be divisible by "
+                         f"block ({br},{bf}); pad upstream")
+    grid = (rows // br, feat // bf)
+    return pl.pallas_call(
+        _halo_kernel_scaled,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, deg), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, deg), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_tab, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((n_tab, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+        interpret=interpret,
+    )(nbr, wts, data, scale)

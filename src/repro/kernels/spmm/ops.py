@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmm.ref import spmm_ref
+from repro.kernels.spmm.halo_pull import halo_spmm_pallas
+from repro.kernels.spmm.ref import halo_spmm_ref, spmm_ref
 from repro.kernels.spmm.spmm import spmm_pallas
 
 
@@ -45,4 +46,27 @@ def spmm(nbr: jax.Array, wts: jax.Array, table: jax.Array,
     wts_p = _pad_dim(wts, 0, 128, value=0)
     tab_p = _pad_dim(table, 1, 128, value=0)
     out = spmm_pallas(nbr_p, wts_p, tab_p, interpret=interpret)
+    return out[:rows, :feat]
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
+              scale: jax.Array = None, backend: str = "auto") -> jax.Array:
+    """Fused halo pull+aggregate against the compact HaloExchange slab.
+
+    out[i] = Σ_k wts[i,k] · dequant(data[nbr[i,k]]) with optional per-row
+    int8 scales — the out-of-subgraph side of Eq. 5 read directly from
+    storage precision (no materialized per-subgraph halo table).
+    """
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if backend == "jnp":
+        return halo_spmm_ref(nbr, wts, data, scale)
+
+    interpret = backend != "pallas"
+    rows, feat = nbr.shape[0], data.shape[1]
+    nbr_p = _pad_dim(nbr, 0, 128, value=data.shape[0] - 1)
+    wts_p = _pad_dim(wts, 0, 128, value=0)
+    dat_p = _pad_dim(data, 1, 128, value=0)
+    out = halo_spmm_pallas(nbr_p, wts_p, dat_p, scale, interpret=interpret)
     return out[:rows, :feat]

@@ -10,3 +10,14 @@ def spmm_ref(nbr: jax.Array, wts: jax.Array, table: jax.Array) -> jax.Array:
     gathered = jnp.take(table, nbr, axis=0)        # (rows, deg, feat)
     w = wts.astype(jnp.float32)[..., None]
     return jnp.sum(w * gathered.astype(jnp.float32), axis=1)
+
+
+def halo_spmm_ref(nbr: jax.Array, wts: jax.Array, data: jax.Array,
+                  scale: jax.Array = None) -> jax.Array:
+    """Fused pull+aggregate oracle: SpMM against a (possibly quantized)
+    compact slab with per-row dequant scales folded into the weights."""
+    w = wts.astype(jnp.float32)
+    if scale is not None:
+        w = w * jnp.take(scale[:, 0], nbr, axis=0)
+    gathered = jnp.take(data, nbr, axis=0).astype(jnp.float32)
+    return jnp.sum(w[..., None] * gathered, axis=1)

@@ -45,6 +45,15 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def cost_properties(compiled) -> dict:
+    """jax-version compat: ``Compiled.cost_analysis()`` returns a dict on
+    jax ≥ 0.5 but a one-element list of dicts on 0.4.x jaxlib."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 _IOTA_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
 _EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[\d,\{\} ]*\})\}")
@@ -224,7 +233,7 @@ def dryrun_case(arch: str, shape_name: str, multi_pod: bool,
 
     # Pass 2: unrolled — true per-device traffic for the roofline.
     if skip_unrolled:
-        cost = compiled.cost_analysis() or {}
+        cost = cost_properties(compiled)
         coll = collective_bytes(compiled.as_text(), pod_boundary)
         scale = float(base.repeats)  # approximate loop-body rescale
         flops = float(cost.get("flops", 0.0)) * scale
@@ -237,7 +246,7 @@ def dryrun_case(arch: str, shape_name: str, multi_pod: bool,
         compiled_u = _lower_case(cfg_unroll, shape_name, mesh, rules,
                                  sync_mode).compile()
         out["t_compile_unroll_s"] = round(time.perf_counter() - t1, 2)
-        cost = compiled_u.cost_analysis() or {}
+        cost = cost_properties(compiled_u)
         coll = collective_bytes(compiled_u.as_text(), pod_boundary)
         flops = float(cost.get("flops", 0.0))
         bytes_acc = float(cost.get("bytes accessed", 0.0))

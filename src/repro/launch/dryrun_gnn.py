@@ -1,6 +1,6 @@
 """GNN dry-run: DIGEST's own workload (Algorithm 1) lowered on the
 production mesh — M=256 subgraphs of a large synthetic graph, one per chip
-on the "data" axis, stale store sharded node-wise.
+on the "data" axis, compact HaloExchange store sharded slot-wise.
 
   PYTHONPATH=src python -m repro.launch.dryrun_gnn [--multi-pod]
 
@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import TrainSettings, make_epoch_fn
-from repro.launch.dryrun import collective_bytes
+from repro.core import HaloPrecision, TrainSettings, make_epoch_fn
+from repro.launch.dryrun import collective_bytes, cost_properties
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
                                make_production_mesh)
 from repro.models.gnn import GNNConfig, gnn_specs
@@ -28,10 +28,11 @@ from repro.optim import adam
 
 def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
                       hidden: int, classes: int, deg_in: int, deg_out: int,
-                      halo_frac: float):
+                      halo_frac: float, boundary_frac: float = 0.5):
     """ShapeDtypeStruct stand-ins for a partitioned graph (no host build —
     at 256 parts × 1M nodes the partitioner would dominate; shapes are what
-    the compiler needs)."""
+    the compiler needs).  ``boundary_frac`` models |boundary| / N — the
+    compact HaloExchange store holds only those rows."""
     S = num_nodes // num_parts
     H = int(S * halo_frac)
     i32 = jnp.int32
@@ -39,15 +40,23 @@ def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
     sds = jax.ShapeDtypeStruct
     # Node tables carry the sentinel row; pad row count to shard evenly.
     rows = ((num_nodes + 1 + num_parts - 1) // num_parts) * num_parts
+    # Compact-store slots (+ sentinel), padded to shard evenly slot-wise.
+    slots = ((int(num_nodes * boundary_frac) + 1 + num_parts - 1)
+             // num_parts) * num_parts
     data = {
         "x_global": sds((rows, feat), f32),
         "struct": {"in_nbr": sds((num_parts, S, deg_in), i32),
                    "in_wts": sds((num_parts, S, deg_in), f32),
                    "out_nbr": sds((num_parts, S, deg_out), i32),
-                   "out_wts": sds((num_parts, S, deg_out), f32)},
+                   "out_wts": sds((num_parts, S, deg_out), f32),
+                   "out_nbr_s": sds((num_parts, S, deg_out), i32),
+                   "out_nbr_g": sds((num_parts, S, deg_out), i32)},
         "local_ids": sds((num_parts, S), i32),
         "local_valid": sds((num_parts, S), jnp.bool_),
         "halo_ids": sds((num_parts, H), i32),
+        "local_slots": sds((num_parts, S), i32),
+        "halo_slots": sds((num_parts, H), i32),
+        "store_ids": sds((slots,), i32),
         "labels": sds((num_parts, S), i32),
         "train_mask": sds((num_parts, S), jnp.bool_),
         "val_mask": sds((num_parts, S), jnp.bool_),
@@ -56,7 +65,9 @@ def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
         "full_struct": {"in_nbr": sds((1, 8, 1), i32),
                         "in_wts": sds((1, 8, 1), f32),
                         "out_nbr": sds((1, 8, 1), i32),
-                        "out_wts": sds((1, 8, 1), f32)},
+                        "out_wts": sds((1, 8, 1), f32),
+                        "out_nbr_s": sds((1, 8, 1), i32),
+                        "out_nbr_g": sds((1, 8, 1), i32)},
         "full_ids": sds((1, 8), i32),
         "full_valid": sds((1, 8), jnp.bool_),
         "full_labels": sds((1, 8), i32),
@@ -64,7 +75,7 @@ def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
         "full_val_mask": sds((1, 8), jnp.bool_),
         "full_test_mask": sds((1, 8), jnp.bool_),
     }
-    return data, S, H, rows
+    return data, S, H, rows, slots
 
 
 def main():
@@ -74,6 +85,8 @@ def main():
     ap.add_argument("--feat", type=int, default=128)
     ap.add_argument("--hidden", type=int, default=256)
     ap.add_argument("--deg", type=int, default=16)
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "bf16", "int8"))
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -86,10 +99,12 @@ def main():
     cfg = GNNConfig(model="gcn", num_layers=3, in_dim=args.feat,
                     hidden_dim=args.hidden, num_classes=64)
     opt = adam(5e-3)
-    settings = TrainSettings(sync_interval=10, mode="digest")
-    data, S, H, rows = abstract_gnn_case(args.nodes, num_parts, args.feat,
-                                         args.hidden, 64, args.deg,
-                                         args.deg // 2, halo_frac=1.0)
+    precision = HaloPrecision(args.precision)
+    settings = TrainSettings(sync_interval=10, mode="digest",
+                             precision=precision)
+    data, S, H, rows, slots = abstract_gnn_case(
+        args.nodes, num_parts, args.feat, args.hidden, 64, args.deg,
+        args.deg // 2, halo_frac=1.0)
 
     rep = NamedSharding(mesh, P())
     mdim = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
@@ -98,13 +113,22 @@ def main():
 
     specs = gnn_specs(cfg)
     params_abs = abstract_params(specs)
+    # Compact HaloExchange store/cache: (L-1, |boundary|+1 padded, hidden)
+    # in storage precision (int8 adds the per-row scale column).
+    store_abs = {"data": jax.ShapeDtypeStruct(
+        (cfg.num_layers - 1, slots, args.hidden), precision.dtype)}
+    store_sh = {"data": NamedSharding(mesh, P(None, mdim, None))}
+    cache_sh = {"data": rep}
+    if precision.has_scale:
+        store_abs["scale"] = jax.ShapeDtypeStruct(
+            (cfg.num_layers - 1, slots, 1), jnp.float32)
+        store_sh["scale"] = NamedSharding(mesh, P(None, mdim, None))
+        cache_sh["scale"] = rep
     state_abs = {
         "params": params_abs,
         "opt_state": jax.eval_shape(opt.init, params_abs),
-        "store": jax.ShapeDtypeStruct(
-            (cfg.num_layers - 1, rows, args.hidden), jnp.float32),
-        "halo_cache": jax.ShapeDtypeStruct(
-            (num_parts, cfg.num_layers - 1, H, args.hidden), jnp.float32),
+        "store": store_abs,
+        "cache": store_abs,
         "epoch": jax.ShapeDtypeStruct((), jnp.int32),
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
@@ -112,13 +136,15 @@ def main():
         "params": jax.tree.map(lambda _: rep, params_abs),
         "opt_state": jax.tree.map(lambda _: rep,
                                   state_abs["opt_state"]),
-        "store": NamedSharding(mesh, P(None, mdim, None)),
-        "halo_cache": m_shard, "epoch": rep, "step": rep,
+        "store": store_sh, "cache": cache_sh,
+        "epoch": rep, "step": rep,
     }
     data_sh = {}
     for k, v in data.items():
         if k == "x_global":
             data_sh[k] = NamedSharding(mesh, P(mdim, None))
+        elif k == "store_ids":
+            data_sh[k] = rep
         elif k == "struct":
             data_sh[k] = {kk: m_shard for kk in v}
         elif k.startswith("full_"):
@@ -131,14 +157,15 @@ def main():
     lowered = jax.jit(epoch_fn, in_shardings=(state_sh, data_sh)).lower(
         state_abs, data)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_properties(compiled)
     mem = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     out = {
         "case": "digest_gnn_epoch",
         "mesh": "2x16x16" if args.multi_pod else "16x16",
         "nodes": args.nodes, "parts": num_parts, "S": S, "H": H,
-        "hidden": args.hidden,
+        "hidden": args.hidden, "precision": args.precision,
+        "store_slots": slots,
         "hlo_flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll["total"],

@@ -6,7 +6,18 @@ touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+import jax.sharding
+
+# jax < 0.5 has no jax.sharding.AxisType (and make_mesh takes no axis_types
+# kwarg); fall back to plain meshes there so imports stay version-portable.
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,8 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
@@ -26,8 +36,7 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
         axes.append("pod")
     shape += [data, model]
     axes += ["data", "model"]
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(tuple(shape), tuple(axes))
 
 
 # Hardware constants (TPU v5e) for the roofline report.

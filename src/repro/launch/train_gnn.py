@@ -15,11 +15,10 @@ import argparse
 import time
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import TrainSettings, evaluate, init_state, make_epoch_fn, \
-    prepare_graph_data
+from repro.core import HaloPrecision, TrainSettings, evaluate, init_state, \
+    make_epoch_fn, prepare_graph_data
 from repro.graph import make_dataset
 from repro.launch.mesh import make_host_mesh
 from repro.models.gnn import GNNConfig
@@ -27,24 +26,21 @@ from repro.optim import adam
 
 
 def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
-    """Shard every stacked (M, ...) array over 'data'; the stale store is
-    sharded node-wise; params/opt replicated (GNN weights are tiny)."""
+    """Shard every stacked (M, ...) array over 'data'.  The compact
+    HaloExchange store is sharded slot-wise (each device owns the boundary
+    rows it pushes; pulls pay the wire, matching §3.3), while the pulled
+    snapshot slab is replicated — every subgraph gathers arbitrary slots
+    from it on non-pull epochs.  Params/opt replicated (GNN weights are
+    tiny)."""
     rep = NamedSharding(mesh, P())
     m_shard = NamedSharding(mesh, P("data"))
-
-    def data_leaf(path, x):
-        key = path[0].key if hasattr(path[0], "key") else str(path[0])
-        if key in ("x_global",):
-            return rep
-        if key.startswith("full_"):
-            return rep
-        return m_shard if np.ndim(x) >= 1 else rep
+    slot_shard = NamedSharding(mesh, P(None, "data", None))
 
     data_sh = {}
     for k, v in data.items():
         if k.startswith("_"):
             continue
-        if k in ("x_global",) or k.startswith("full_"):
+        if k in ("x_global", "store_ids") or k.startswith("full_"):
             data_sh[k] = jax.tree.map(lambda _: rep, v)
         elif k == "struct":
             data_sh[k] = {kk: m_shard for kk in v}
@@ -53,8 +49,8 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
     state_sh = {
         "params": jax.tree.map(lambda _: rep, state["params"]),
         "opt_state": jax.tree.map(lambda _: rep, state["opt_state"]),
-        "store": NamedSharding(mesh, P(None, "data", None)),
-        "halo_cache": m_shard,
+        "store": jax.tree.map(lambda _: slot_shard, state["store"]),
+        "cache": jax.tree.map(lambda _: rep, state["cache"]),
         "epoch": rep, "step": rep,
     }
     return data_sh, state_sh
@@ -68,6 +64,9 @@ def main():
     ap.add_argument("--parts", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--interval", type=int, default=10)
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "bf16", "int8"),
+                    help="HaloExchange wire/storage precision")
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size (1 on CPU)")
     args = ap.parse_args()
@@ -78,10 +77,11 @@ def main():
                     in_dim=g.features.shape[1], hidden_dim=64,
                     num_classes=int(g.labels.max()) + 1)
     opt = adam(5e-3)
-    settings = TrainSettings(sync_interval=args.interval, mode="digest")
+    settings = TrainSettings(sync_interval=args.interval, mode="digest",
+                             precision=HaloPrecision(args.precision))
     mesh = make_host_mesh(data=args.data_axis, model=1)
 
-    state = init_state(cfg, opt, data)
+    state = init_state(cfg, opt, data, precision=settings.precision)
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
     data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
     epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings),

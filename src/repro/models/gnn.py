@@ -8,11 +8,26 @@ zeros (partition-based baseline), or fresh remote reps (propagation-based
 baseline).  The trainer chooses the table; the model is agnostic, which is
 exactly what makes the baseline frameworks share 95% of the code path.
 
+A halo table is either
+
+  * a plain ``(H, d)`` array — per-subgraph tables (propagation baselines,
+    direct model tests): aggregated through ``struct["out_nbr"]`` with a
+    zero sentinel row appended at H; or
+  * a **halo ref** dict ``{"data", "scale", "nbr", "wts"}`` — a shared
+    slab (the HaloExchange compact store layer, or ``x_global`` for layer
+    0) in storage precision plus the ELL indices *into that slab*.  The
+    out-of-subgraph product then runs through the fused pull+aggregate
+    kernel (:func:`repro.kernels.spmm.halo_spmm`): no per-subgraph halo
+    table is ever materialized, and int8/bf16 rows are dequantized inside
+    the kernel.  Under ``jax.vmap`` the slab enters unbatched, so slab-wide
+    work (e.g. GAT's halo projection) is computed once, not per subgraph.
+
 Shapes (single subgraph):
   x_local   (S, d)      padded local node features/reps
-  x_halo    (H, d)      halo table for this layer's input
+  x_halo    (H, d)      halo table for this layer's input (legacy form)
   in_nbr    (S, Din)    local slot ids, sentinel == S
   out_nbr   (S, Dout)   halo slot ids, sentinel == H
+  ref[nbr]  (S, Dout)   slab row ids, sentinel == ref["data"].shape[0]-1
 """
 from __future__ import annotations
 
@@ -22,10 +37,27 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmm import spmm
+from repro.kernels.spmm import halo_spmm, spmm
 from repro.nn import ParamSpec, dense
 
 Pytree = Any
+
+
+def halo_ref(data: jax.Array, scale: Optional[jax.Array],
+             nbr: jax.Array, wts: jax.Array) -> dict:
+    """Bundle a shared halo slab (with sentinel zero row last) + indices."""
+    ref = {"data": data, "nbr": nbr, "wts": wts}
+    if scale is not None:
+        ref["scale"] = scale
+    return ref
+
+
+def _as_halo_ref(table, struct: dict) -> dict:
+    """Normalize a legacy (H, d) table to the halo-ref form."""
+    if isinstance(table, dict):
+        return table
+    return halo_ref(_pad_sentinel(table), None,
+                    struct["out_nbr"], struct["out_wts"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,47 +127,70 @@ def gnn_specs(cfg: GNNConfig) -> Pytree:
 # ---------------------------------------------------------------------------
 
 def _gcn_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
+    ref = _as_halo_ref(x_halo, struct)
     agg = spmm(struct["in_nbr"], struct["in_wts"], _pad_sentinel(x_local),
                backend=cfg.backend)
-    agg = agg + spmm(struct["out_nbr"], struct["out_wts"],
-                     _pad_sentinel(x_halo), backend=cfg.backend)
+    agg = agg + halo_spmm(ref["nbr"], ref["wts"], ref["data"],
+                          ref.get("scale"), backend=cfg.backend)
     return dense(agg, p["w"], p["b"])
 
 
 def _sage_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
     # Mean aggregator: row-normalize the (GCN) weights to a mean.
-    in_w, out_w = struct["in_wts"], struct["out_wts"]
+    ref = _as_halo_ref(x_halo, struct)
+    in_w, out_w = struct["in_wts"], ref["wts"]
     denom = jnp.sum(in_w, axis=1, keepdims=True) + jnp.sum(
         out_w, axis=1, keepdims=True)
     denom = jnp.maximum(denom, 1e-12)
     agg = spmm(struct["in_nbr"], in_w / denom, _pad_sentinel(x_local),
                backend=cfg.backend)
-    agg = agg + spmm(struct["out_nbr"], out_w / denom,
-                     _pad_sentinel(x_halo), backend=cfg.backend)
+    agg = agg + halo_spmm(ref["nbr"], out_w / denom, ref["data"],
+                          ref.get("scale"), backend=cfg.backend)
     return (dense(x_local, p["w_self"]) + dense(agg, p["w_nbr"]) + p["b"])
+
+
+def _multihead_spmm(nbr, att, z_pad, backend):
+    """(S, D, heads) attention × (T, heads, dh) tables → (S, heads·dh).
+
+    One batched aggregation (vmap over the head axis) instead of a Python
+    loop of per-head spmm calls — compiles to a single kernel launch per
+    adjacency side.
+    """
+    per_head = jax.vmap(lambda a, z: spmm(nbr, a, z, backend=backend),
+                        in_axes=(2, 1), out_axes=1)
+    out = per_head(att, z_pad)                    # (S, heads, dh)
+    return out.reshape(out.shape[0], -1)
 
 
 def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
     S = x_local.shape[0]
-    H = x_halo.shape[0]
+    ref = _as_halo_ref(x_halo, struct)
+    # GAT needs halo rows densely (projection + attention scores), so the
+    # slab is dequantized here; when it enters vmap unbatched (shared
+    # compact store) this — and the projection below — happens once for
+    # all subgraphs, not per subgraph.
+    x_out = ref["data"].astype(jnp.float32)
+    if "scale" in ref:
+        x_out = x_out * ref["scale"]
+    T = x_out.shape[0]                            # slab rows incl. sentinel
     heads, dh = p["a_src"].shape
     z_loc = jnp.einsum("sd,dhk->shk", x_local, p["w"])    # (S, heads, dh)
-    z_out = jnp.einsum("sd,dhk->shk", x_halo, p["w"])     # (H, heads, dh)
+    z_out = jnp.einsum("sd,dhk->shk", x_out, p["w"])      # (T, heads, dh)
 
     s_dst = jnp.einsum("shk,hk->sh", z_loc, p["a_dst"])   # (S, heads)
     src_loc = jnp.einsum("shk,hk->sh", z_loc, p["a_src"])  # (S, heads)
-    src_out = jnp.einsum("shk,hk->sh", z_out, p["a_src"])  # (H, heads)
+    src_out = jnp.einsum("shk,hk->sh", z_out, p["a_src"])  # (T, heads)
 
     def _scores(nbr, src_table, n_cols):
-        pad = jnp.concatenate([src_table,
-                               jnp.zeros((1, heads), src_table.dtype)], 0)
-        s_src = jnp.take(pad, nbr, axis=0)                 # (S, D, heads)
+        s_src = jnp.take(src_table, nbr, axis=0)           # (S, D, heads)
         e = jax.nn.leaky_relu(s_dst[:, None, :] + s_src, 0.2)
         valid = (nbr < n_cols)[..., None]
         return jnp.where(valid, e, -1e30), valid
 
-    e_in, v_in = _scores(struct["in_nbr"], src_loc, S)
-    e_out, v_out = _scores(struct["out_nbr"], src_out, H)
+    src_loc_pad = jnp.concatenate(
+        [src_loc, jnp.zeros((1, heads), src_loc.dtype)], 0)
+    e_in, v_in = _scores(struct["in_nbr"], src_loc_pad, S)
+    e_out, v_out = _scores(ref["nbr"], src_out, T - 1)
 
     m = jnp.maximum(jnp.max(e_in, axis=1), jnp.max(e_out, axis=1))
     m = jax.lax.stop_gradient(m)                           # (S, heads)
@@ -145,14 +200,11 @@ def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
     a_in = p_in / denom[:, None, :]                        # (S, Din, heads)
     a_out = p_out / denom[:, None, :]
 
-    outs = []
-    for h in range(heads):
-        o = spmm(struct["in_nbr"], a_in[..., h],
-                 _pad_sentinel(z_loc[:, h]), backend=cfg.backend)
-        o = o + spmm(struct["out_nbr"], a_out[..., h],
-                     _pad_sentinel(z_out[:, h]), backend=cfg.backend)
-        outs.append(o)
-    return jnp.concatenate(outs, axis=-1) + p["b"]
+    z_loc_pad = jnp.concatenate(
+        [z_loc, jnp.zeros((1,) + z_loc.shape[1:], z_loc.dtype)], 0)
+    out = _multihead_spmm(struct["in_nbr"], a_in, z_loc_pad, cfg.backend)
+    out = out + _multihead_spmm(ref["nbr"], a_out, z_out, cfg.backend)
+    return out + p["b"]
 
 
 _LAYERS = {"gcn": _gcn_layer, "sage": _sage_layer, "gat": _gat_layer}

@@ -5,8 +5,71 @@ import os
 os.environ.pop("XLA_FLAGS", None)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import functools
+import inspect
+import random
+import sys
+import types
+
 import numpy as np
 import pytest
+
+# ---------------------------------------------------------------------------
+# Minimal deterministic `hypothesis` stand-in.
+#
+# The container has no hypothesis wheel and nothing may be pip-installed;
+# rather than skip the property tests, provide the tiny subset they use
+# (given / settings / strategies.integers / strategies.sampled_from) drawing
+# `max_examples` pseudo-random examples from a fixed seed.  If the real
+# hypothesis is installed (e.g. in CI) it is used untouched.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    def _given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(0xD16E57)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # Hide the drawn params from pytest's fixture resolution.
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def _settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -36,3 +36,45 @@ def test_shape_mismatch_raises(tmp_path):
 def test_missing_dir_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_checkpoint(str(tmp_path / "nope"), {"x": jnp.zeros(1)})
+
+
+def test_bf16_store_roundtrip(tmp_path):
+    """bfloat16 leaves (ml_dtypes extension type) survive npz via the f32
+    widening path and restore back to bf16 losslessly."""
+    from repro.core import halo_exchange as hx
+
+    store = hx.init_store(1, 4, 8, hx.HaloPrecision("bf16"))
+    store = hx.push(store, jnp.asarray([[0, 2]]), jnp.ones((1, 2), bool),
+                    jnp.asarray(np.random.default_rng(0).normal(
+                        size=(1, 1, 2, 8)).astype(np.float32)))
+    save_checkpoint(str(tmp_path), 1, {"store": store})
+    restored, _ = restore_checkpoint(str(tmp_path), {"store": store})
+    assert restored["store"]["data"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        restored["store"]["data"].astype(np.float32),
+        np.asarray(store["data"]).astype(np.float32))
+
+
+def test_compact_halo_store_roundtrip(tmp_path):
+    """The quantized HaloExchange store serializes losslessly (int8 data +
+    fp32 scales keep their dtypes), with the precision in the manifest."""
+    from repro.checkpoint import read_manifest
+    from repro.core import halo_exchange as hx
+
+    store = hx.init_store(2, 9, 8, hx.HaloPrecision("int8"))
+    slots = jnp.asarray([[0, 4, 8]])
+    valid = jnp.asarray([[True, True, False]])
+    reps = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, 2, 3, 8)).astype(np.float32))
+    store = hx.push(store, slots, valid, reps)
+    state = {"store": store, "step": jnp.asarray(5)}
+
+    save_checkpoint(str(tmp_path), 5, state, meta={"halo_storage": "int8"})
+    restored, step = restore_checkpoint(str(tmp_path), state)
+    assert step == 5
+    assert restored["store"]["data"].dtype == np.int8
+    np.testing.assert_array_equal(restored["store"]["data"],
+                                  np.asarray(store["data"]))
+    np.testing.assert_array_equal(restored["store"]["scale"],
+                                  np.asarray(store["scale"]))
+    assert read_manifest(str(tmp_path), 5)["meta"]["halo_storage"] == "int8"

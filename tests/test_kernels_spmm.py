@@ -1,11 +1,14 @@
-"""Pallas ELL SpMM kernel vs pure-jnp oracle: shape/dtype sweeps."""
+"""Pallas ELL SpMM kernel vs pure-jnp oracle: shape/dtype sweeps, plus the
+fused HaloExchange pull+aggregate variant (precision-aware slab gather)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.spmm import spmm, spmm_pallas, spmm_ref
+from repro.core import halo_exchange as hx
+from repro.kernels.spmm import halo_spmm, halo_spmm_ref, spmm, spmm_pallas, \
+    spmm_ref
 
 
 def _case(rng, rows, deg, ncols, feat, dtype):
@@ -49,6 +52,31 @@ def test_spmm_property(rows, deg, ncols, feat, seed):
     out = spmm(nbr, wts, table, backend="pallas_interpret")
     ref = spmm_ref(nbr, wts, table)
     np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("storage", ["fp32", "bf16", "int8"])
+def test_halo_spmm_fused_dequant(storage):
+    """Fused pull+aggregate == dequantize-then-spmm, at every precision."""
+    rng = np.random.default_rng(11)
+    nbr, wts, table = _case(rng, 64, 6, 50, 48, np.float32)
+    data, scale = hx.quantize_rows(table, hx.HaloPrecision(storage))
+    # the sentinel row stays representable as exact zero
+    data = data.at[-1].set(0)
+    deq = hx.dequantize_rows(data, scale)
+    want = spmm_ref(nbr, wts, deq)
+    got_ref = halo_spmm_ref(nbr, wts, data, scale)
+    got_pl = halo_spmm(nbr, wts, data, scale, backend="pallas_interpret")
+    np.testing.assert_allclose(got_ref, want, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(got_pl, want, atol=1e-5, rtol=1e-5)
+
+
+def test_halo_spmm_fp32_equals_spmm():
+    """With an fp32 slab and no scales the fused kernel IS plain spmm."""
+    rng = np.random.default_rng(13)
+    nbr, wts, table = _case(rng, 128, 8, 100, 64, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(halo_spmm(nbr, wts, table, None, backend="jnp")),
+        np.asarray(spmm(nbr, wts, table, backend="jnp")))
 
 
 def test_spmm_dense_oracle():

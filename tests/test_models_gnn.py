@@ -42,6 +42,41 @@ def test_distributed_fresh_equals_full_graph(model):
         np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
 
 
+@pytest.mark.parametrize("model", ["gcn", "sage", "gat"])
+def test_zero_slab_ref_equals_zero_tables(model):
+    """Partition-mode semantics: a zeroed shared slab (halo-ref form, real
+    ELL weights) must equal the legacy zeroed per-part tables — dropped
+    neighbors still count as zero vectors in GAT's attention denominator
+    and SAGE's mean, they don't vanish from the normalization."""
+    from repro.models.gnn import halo_ref
+
+    g = make_dataset("flickr-sim", scale=0.05)
+    data = prepare_graph_data(g, 2)
+    cfg = GNNConfig(model=model, num_layers=2, in_dim=g.features.shape[1],
+                    hidden_dim=32, num_classes=int(g.labels.max()) + 1,
+                    heads=4)
+    params = init_params(jax.random.PRNGKey(1), gnn_specs(cfg))
+    m = 0
+    x_local = data["x_global"][data["local_ids"]][m]
+    struct = {k: v[m] for k, v in data["struct"].items()}
+    H = data["halo_ids"].shape[1]
+    B = int(data["store_ids"].shape[0]) - 1
+
+    legacy_tables = [jnp.zeros((H, cfg.in_dim))] + \
+        [jnp.zeros((H, cfg.hidden_dim))] * (cfg.num_layers - 1)
+    want, _ = gnn_forward(cfg, params, x_local, legacy_tables, struct)
+
+    n1 = data["x_global"].shape[0]
+    refs = [halo_ref(jnp.zeros((n1, cfg.in_dim)), None,
+                     struct["out_nbr_g"], struct["out_wts"])] + \
+        [halo_ref(jnp.zeros((B + 1, cfg.hidden_dim)), None,
+                  struct["out_nbr_s"], struct["out_wts"])] * \
+        (cfg.num_layers - 1)
+    got, _ = gnn_forward(cfg, params, x_local, refs, struct)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
 def test_normalization_applied():
     g = make_dataset("flickr-sim", scale=0.05)
     data = prepare_graph_data(g, 2)

@@ -80,7 +80,8 @@ SUBPROCESS_TEST = textwrap.dedent("""
         lowered = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(
             state_abs, batch_abs)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        from repro.launch.dryrun import cost_properties
+        cost = cost_properties(compiled)
         print(json.dumps({"ok": True, "flops": cost.get("flops", 0)}))
 """)
 

@@ -1,38 +1,146 @@
-"""Stale store (the KVS): push/pull semantics."""
+"""HaloExchange compact store: push/pull semantics, precision, and parity
+with the dense reference store (repro.core.stale_store)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import halo_exchange as hx
 from repro.core import stale_store
+from repro.graph import build_partitions, make_dataset
 
 
-def test_push_pull_roundtrip():
-    store = stale_store.init_store(2, 10, 4)
-    local_ids = jnp.asarray([[0, 3, 10], [5, 7, 10]])   # 10 = sentinel pad
+def test_push_pull_roundtrip_compact():
+    store = hx.init_store(2, 10, 4)
+    slots = jnp.asarray([[0, 3, 10], [5, 7, 10]])       # 10 = sentinel pad
     valid = jnp.asarray([[True, True, False], [True, True, False]])
     reps = jnp.arange(2 * 2 * 3 * 4, dtype=jnp.float32).reshape(2, 2, 3, 4)
-    store = stale_store.push(store, local_ids, valid, reps)
-    # pull back the pushed rows
-    pulled = stale_store.pull(store, local_ids)
+    store = hx.push(store, slots, valid, reps)
+    pulled = hx.pull(store, slots)
     np.testing.assert_allclose(np.asarray(pulled)[:, :, :2],
                                np.asarray(reps)[:, :, :2])
     # sentinel row must stay zero (padding reads are zeros)
-    assert float(jnp.abs(store[:, 10]).max()) == 0.0
+    assert float(jnp.abs(store["data"][:, 10]).max()) == 0.0
+
+
+@pytest.mark.parametrize("storage", ["fp32", "bf16", "int8"])
+def test_sentinel_stays_zero_all_precisions(storage):
+    store = hx.init_store(1, 6, 8, hx.HaloPrecision(storage))
+    slots = jnp.asarray([[0, 2, 6, 6]])
+    valid = jnp.asarray([[True, True, True, False]])   # valid row → sentinel
+    reps = jnp.full((1, 1, 4, 8), 3.7, jnp.float32)
+    store = hx.push(store, slots, valid, reps)
+    assert float(jnp.abs(store["data"][:, 6].astype(jnp.float32)).max()) == 0
+    pulled = hx.pull(store, jnp.asarray([[6, 6]]))
+    assert float(jnp.abs(pulled).max()) == 0.0
 
 
 def test_pull_shape():
-    store = stale_store.init_store(3, 20, 8)
-    halo = jnp.asarray([[1, 2, 20], [4, 20, 20]])
-    out = stale_store.pull(store, halo)
-    assert out.shape == (2, 3, 3, 8)
+    store = hx.init_store(3, 20, 8)
+    slots = jnp.asarray([[1, 2, 20], [4, 20, 20]])
+    assert hx.pull(store, slots).shape == (2, 3, 3, 8)
 
 
-def test_staleness_error_zero_after_push():
-    store = stale_store.init_store(1, 6, 2)
-    ids = jnp.asarray([[0, 1], [2, 3]])
-    valid = jnp.ones((2, 2), bool)
-    reps = jnp.ones((2, 1, 2, 2))
-    store = stale_store.push(store, ids, valid, reps)
-    eps = stale_store.staleness_error(store, reps, ids, valid)
-    assert float(eps.max()) == 0.0
-    eps2 = stale_store.staleness_error(store, 3 * reps, ids, valid)
-    assert float(eps2.max()) > 0.0
+def test_int8_quantization_error_bound():
+    rng = np.random.default_rng(0)
+    reps = rng.normal(size=(2, 2, 5, 16)).astype(np.float32) * 3.0
+    store = hx.init_store(2, 10, 16, hx.HaloPrecision("int8"))
+    slots = jnp.asarray([[0, 1, 2, 3, 4], [5, 6, 7, 8, 9]])
+    valid = jnp.ones((2, 5), bool)
+    store = hx.push(store, slots, valid, jnp.asarray(reps))
+    pulled = np.asarray(hx.pull(store, slots))
+    # symmetric per-row int8: |err| <= scale/2 = max|row| / 254, use /127
+    bound = np.abs(reps).max(axis=-1, keepdims=True) / 127.0
+    assert (np.abs(pulled - reps) <= bound + 1e-6).all()
+    # and int8 really is the storage dtype
+    assert store["data"].dtype == jnp.int8
+    assert "scale" in store
+
+
+def test_bf16_roundtrip_error():
+    rng = np.random.default_rng(1)
+    reps = rng.normal(size=(1, 1, 4, 8)).astype(np.float32)
+    store = hx.init_store(1, 8, 8, hx.HaloPrecision("bf16"))
+    slots = jnp.asarray([[0, 1, 2, 3]])
+    store = hx.push(store, slots, jnp.ones((1, 4), bool), jnp.asarray(reps))
+    pulled = np.asarray(hx.pull(store, slots))
+    # bf16 has 8 significand bits → relative error ≤ 2^-8
+    assert (np.abs(pulled - reps) <= np.abs(reps) * 2.0 ** -8 + 1e-7).all()
+
+
+@pytest.fixture(scope="module")
+def parts():
+    g = make_dataset("flickr-sim", scale=0.1, seed=2)
+    return g, build_partitions(g, 3)
+
+
+def test_fp32_parity_with_dense_reference(parts):
+    """Compact fp32 pull/push/staleness must agree with the dense seed
+    store on every row it serves (boundary rows)."""
+    g, sp = parts
+    L1, hid = 2, 16
+    rng = np.random.default_rng(3)
+    reps = rng.normal(size=(sp.num_parts, L1, sp.part_size, hid)) \
+        .astype(np.float32)
+    lid = jnp.asarray(sp.local_ids)
+    lval = jnp.asarray(sp.local_valid)
+
+    dense = stale_store.init_store(L1, g.num_nodes, hid)
+    dense = stale_store.push(dense, lid, lval, jnp.asarray(reps))
+    compact = hx.init_store(L1, sp.num_boundary, hid)
+    compact = hx.push(compact, jnp.asarray(sp.local_slots), lval,
+                      jnp.asarray(reps))
+
+    # Every halo pull identical (halo rows are boundary by construction).
+    want = stale_store.pull(dense, jnp.asarray(sp.halo_ids))
+    got = hx.pull(compact, jnp.asarray(sp.halo_slots))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # staleness_error identical when the dense one is masked to the rows
+    # the compact store serves.
+    fresh = jnp.asarray(reps + rng.normal(size=reps.shape)
+                        .astype(np.float32) * 0.1)
+    served = lval & jnp.asarray(sp.local_slots < sp.num_boundary)
+    eps_dense = stale_store.staleness_error(dense, fresh, lid, served)
+    eps_compact = hx.staleness_error(compact, fresh,
+                                     jnp.asarray(sp.local_slots), lval)
+    np.testing.assert_allclose(np.asarray(eps_compact),
+                               np.asarray(eps_dense), rtol=1e-6)
+
+
+def test_boundary_map_consistency(parts):
+    """store_map / store_ids / slot views agree with the id views."""
+    g, sp = parts
+    B = sp.num_boundary
+    assert sp.store_ids.shape == (B + 1,)
+    assert sp.store_ids[-1] == g.num_nodes
+    # round-trip: slot → global → slot
+    assert (sp.store_map[sp.store_ids[:B]] == np.arange(B)).all()
+    # every valid halo entry maps to a real slot, padding to the sentinel
+    assert (sp.halo_slots[sp.halo_valid] < B).all()
+    assert (sp.halo_slots[~sp.halo_valid] == B).all()
+    # out-ELL remaps are consistent with the halo-slot view
+    ext_s = np.concatenate([sp.halo_slots, np.full((sp.num_parts, 1), B,
+                                                   np.int32)], axis=1)
+    ext_g = np.concatenate([sp.halo_ids, np.full((sp.num_parts, 1),
+                                                 g.num_nodes, np.int32)],
+                           axis=1)
+    for m in range(sp.num_parts):
+        np.testing.assert_array_equal(sp.out_nbr_store[m],
+                                      ext_s[m][sp.out_nbr[m]])
+        np.testing.assert_array_equal(sp.out_nbr_global[m],
+                                      ext_g[m][sp.out_nbr[m]])
+
+
+def test_comm_and_memory_accounting(parts):
+    g, sp = parts
+    spec32 = hx.HaloSpec.from_partitions(sp, 64, 3)
+    spec8 = hx.HaloSpec.from_partitions(sp, 64, 3, hx.HaloPrecision("int8"))
+    # compact store is O(|boundary|), not O(N)
+    assert spec32.store_nbytes() == 2 * (sp.num_boundary + 1) * 64 * 4
+    assert spec32.store_nbytes() <= spec32.dense_nbytes(g.num_nodes)
+    # int8 wire bytes ≈ 4× less than fp32 (modulo the per-row scale)
+    c32 = spec32.comm_bytes(sp.pull_rows(), sp.push_rows())
+    c8 = spec8.comm_bytes(sp.pull_rows(), sp.push_rows())
+    assert c8["total_bytes"] < c32["total_bytes"] / 3
+    ratio = c32["pull_bytes"] / c8["pull_bytes"]
+    assert 3.0 < ratio <= 4.0
