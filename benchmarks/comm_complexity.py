@@ -1,5 +1,9 @@
 """§3.3 complexity: per-epoch communication bytes vs mode, N, depth L, and
-HaloExchange wire precision (fp32 / bf16 / int8 + per-row scales)."""
+HaloExchange wire precision (fp32 / bf16 / int8 + per-row scales).  The
+digest pull term is reported three ways: the ragged ideal (Σ_m |halo|
+rows), the padded all_to_all that collective_pull actually ships
+(M·M·K rows, K the PullPlan max pair width), and the replicated-snapshot
+all-gather baseline ((M-1)·(B+1) rows)."""
 from benchmarks.common import bench_scale, emit
 from repro.core import HaloPrecision, HaloSpec, epoch_comm_bytes
 from repro.graph import build_partitions, make_dataset
@@ -11,6 +15,7 @@ def run() -> list[dict]:
     scale = bench_scale()
     g = make_dataset("reddit-sim", scale=0.2 * scale)
     sp = build_partitions(g, 4)
+    plan_k = sp.pull_plan().max_rows
     rows = []
     for L in (2, 3, 4):
         cfg = GNNConfig(num_layers=L, in_dim=g.features.shape[1],
@@ -20,18 +25,28 @@ def run() -> list[dict]:
             b = epoch_comm_bytes(mode, sp, g, pc, 64, L, 10)
             rows.append({"name": f"comm/L={L}/{mode}", "us_per_call": "",
                          "mbytes_per_epoch": round(b / 1e6, 4)})
-        # Wire-precision ablation for the DIGEST pull/push terms.
+        # Wire-precision ablation for the DIGEST pull/push terms, with
+        # the sharded (ragged collective) vs replicated (snapshot
+        # all-gather) pull cost side by side.
         for storage in ("fp32", "bf16", "int8"):
             prec = HaloPrecision(storage)
             b = epoch_comm_bytes("digest", sp, g, pc, 64, L, 10,
                                  halo_precision=prec)
             spec = HaloSpec.from_partitions(sp, 64, L, prec)
             sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
+            repl = spec.replicated_pull_nbytes()
+            coll = spec.collective_pull_nbytes(plan_k)
             rows.append({"name": f"comm/L={L}/digest-{storage}",
                          "us_per_call": "",
                          "mbytes_per_epoch": round(b / 1e6, 4),
                          "pull_mb_per_sync": round(
                              sync["pull_bytes"] / 1e6, 4),
+                         "pull_collective_mb_per_sync": round(coll / 1e6,
+                                                              4),
+                         "pull_replicated_mb_per_sync": round(repl / 1e6,
+                                                              4),
+                         "pull_sharded_saving": round(
+                             repl / max(sync["pull_bytes"], 1), 2),
                          "push_mb_per_sync": round(
                              sync["push_bytes"] / 1e6, 4)})
     return rows

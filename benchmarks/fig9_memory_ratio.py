@@ -1,11 +1,15 @@
 """Fig. 9 (appendix): out-of-subgraph / in-subgraph node ratio — the memory
 overhead of buffering halo representations — plus the compact-vs-dense
-HaloExchange store footprint.  The compact slab is O(|boundary|·L·d)
-(boundary = union of subgraph halos) vs the dense O(N·L·d) array, so the
-reported bytes measure the algorithm, not an implementation artifact."""
+HaloExchange store footprint under the owner-sharded layout.  The slab is
+O(|boundary|·L·d) (boundary = union of subgraph halos) vs the dense
+O(N·L·d) array, sharded 1/M per device; pull bytes compare the ragged
+collective (Σ_m |halo(G_m)| rows per sync) against replicating the slab
+(the PR-1 snapshot layout).  Partition quality is scored by what the
+store actually pays for: edge cut, Σ_m |halo|, and |boundary| side by
+side."""
 from benchmarks.common import bench_scale, emit
 from repro.core import HaloPrecision, HaloSpec
-from repro.graph import build_partitions, make_dataset
+from repro.graph import build_partitions, make_dataset, partition_report
 
 HIDDEN = 64
 LAYERS = 3
@@ -18,20 +22,37 @@ def run() -> list[dict]:
         g = make_dataset(ds, scale=0.25 * scale)
         sp = build_partitions(g, 4)
         ratio = sp.halo_ratio()
+        quality = partition_report(g, sp)
         spec = HaloSpec.from_partitions(sp, HIDDEN, LAYERS)
         spec8 = HaloSpec.from_partitions(sp, HIDDEN, LAYERS,
                                          HaloPrecision("int8"))
         dense = spec.dense_nbytes(g.num_nodes)
+        sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
         rows.append({"name": f"fig9/{ds}",
                      "us_per_call": "",
                      "halo_ratio_mean": round(float(ratio.mean()), 4),
                      "halo_ratio_max": round(float(ratio.max()), 4),
                      "avg_degree": round(g.num_edges / g.num_nodes, 2),
                      "boundary_frac": round(sp.boundary_fraction(), 4),
+                     # partition quality: the §3.3 cost drivers next to
+                     # the classic edge-cut objective
+                     "edge_cut": quality["edge_cut"],
+                     "halo_rows": quality["halo_rows"],
+                     "boundary": quality["boundary"],
+                     "balance": round(quality["balance"], 4),
                      "dense_store_mb": round(dense / 1e6, 4),
                      "compact_fp32_mb": round(spec.store_nbytes() / 1e6, 4),
                      "compact_int8_mb": round(spec8.store_nbytes() / 1e6,
                                               4),
+                     # owner-sharded residency: bytes each device keeps
+                     "per_device_fp32_mb": round(spec.shard_nbytes() / 1e6,
+                                                 4),
+                     "per_device_int8_mb": round(spec8.shard_nbytes() / 1e6,
+                                                 4),
+                     # pull wire: ragged collective vs replicating the slab
+                     "pull_sharded_mb": round(sync["pull_bytes"] / 1e6, 4),
+                     "pull_replicated_mb": round(
+                         spec.replicated_pull_nbytes() / 1e6, 4),
                      "mem_ratio_fp32": round(spec.store_nbytes() / dense,
                                              4),
                      "mem_ratio_int8": round(spec8.store_nbytes() / dense,

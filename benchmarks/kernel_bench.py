@@ -1,13 +1,21 @@
 """Kernel micro-benchmarks (CPU host timings of the jnp paths; the Pallas
 TPU kernels are validated in interpret mode and characterized structurally
-in the roofline — wall-clock kernel timing needs real hardware)."""
+in the roofline — wall-clock kernel timing needs real hardware).
+
+The resident-vs-streaming halo_spmm pair runs both Pallas variants in
+interpret mode on an identical int8 slab: the numbers are Python-
+interpreter timings (not TPU wall clock) but pin the structural cost of
+chunking — and, more importantly, that the streaming path handles a slab
+several chunks long while the resident path parks it whole in VMEM."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core import halo_exchange as hx
 from repro.kernels.flash_attention import multi_head_attention
-from repro.kernels.spmm import spmm
+from repro.kernels.spmm import (halo_spmm_pallas, halo_spmm_stream_pallas,
+                                spmm)
 from repro.models.attention import chunked_attention
 
 
@@ -21,6 +29,23 @@ def run() -> list[dict]:
     f = jax.jit(lambda a, b, c: spmm(a, b, c, backend="jnp"))
     rows.append({"name": "kernel/spmm_4096x16x128",
                  "us_per_call": round(time_call(f, nbr, wts, tab), 1)})
+    # Resident vs streaming fused halo pull+aggregate (interpret mode)
+    # over a 2048-row int8 slab — 4 chunks of 512 for the streaming path.
+    h_nbr = jnp.asarray(rng.integers(0, 2048, (128, 8)), jnp.int32)
+    h_wts = jnp.asarray(rng.random((128, 8)), jnp.float32)
+    slab = jnp.asarray(rng.normal(size=(2048, 128)), jnp.float32)
+    data, scale = hx.quantize_rows(slab, hx.HaloPrecision("int8"))
+    data = data.at[-1].set(0)
+    res = jax.jit(lambda a, b, c, d: halo_spmm_pallas(
+        a, b, c, d, interpret=True))
+    stm = jax.jit(lambda a, b, c, d: halo_spmm_stream_pallas(
+        a, b, c, d, chunk_rows=512, interpret=True))
+    rows.append({"name": "kernel/halo_spmm_resident_2048x128_int8",
+                 "us_per_call": round(time_call(res, h_nbr, h_wts, data,
+                                                scale), 1)})
+    rows.append({"name": "kernel/halo_spmm_stream_2048x128_int8",
+                 "us_per_call": round(time_call(stm, h_nbr, h_wts, data,
+                                                scale), 1)})
     # Attention 2x1024x8x64.
     q = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.bfloat16)
     k = jnp.asarray(rng.normal(size=(2, 1024, 2, 64)), jnp.bfloat16)

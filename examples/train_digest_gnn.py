@@ -11,9 +11,9 @@ import json
 import os
 
 from repro.checkpoint import save_checkpoint
-from repro.core import (TrainSettings, digest_train, epoch_comm_bytes,
-                        prepare_graph_data)
-from repro.graph import make_dataset
+from repro.core import (HaloSpec, TrainSettings, digest_train,
+                        epoch_comm_bytes, prepare_graph_data)
+from repro.graph import make_dataset, partition_report
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import param_count
 from repro.optim import adam
@@ -43,6 +43,15 @@ def main():
     print(f"dataset={g.name} nodes={g.num_nodes} edges={g.num_edges} "
           f"parts={args.parts} params={pc:,}")
     print(f"halo ratio per part: {data['_sp'].halo_ratio().round(2)}")
+    quality = partition_report(g, data["_sp"])
+    print(f"partition: edge_cut={quality['edge_cut']} "
+          f"halo_rows={quality['halo_rows']} "
+          f"boundary={quality['boundary']} "
+          f"balance={quality['balance']:.3f}")
+    spec = HaloSpec.from_partitions(data["_sp"], args.hidden,
+                                    cfg.num_layers)
+    print(f"halo store: {spec.store_nbytes()/1e6:.2f} MB total, "
+          f"{spec.shard_nbytes()/1e6:.2f} MB/device (owner-sharded)")
 
     state, hist = digest_train(
         cfg, adam(args.lr), data,

@@ -5,7 +5,15 @@ template pytree (used for both DIGEST GNN training state and the transformer
 train states).  Leaf dtypes are preserved by npz, so the compact
 HaloExchange store ({"data": int8/bf16/fp32, "scale": fp32}) round-trips
 its quantized layout byte-for-byte; ``meta`` lets callers record the
-precision config alongside (see ``read_manifest``).
+precision/layout config alongside (see ``read_manifest``).
+
+The owner-sharded store needs no special casing on save — ``np.asarray``
+on a sharded jax array gathers the full (L-1, M·shard_rows, hidden) slab
+to host, and the slot layout is positional, so a checkpoint written from
+an M-device run restores bit-identically on any device count.  Pass
+``sharding=`` (a pytree of shardings, or one sharding for all leaves) to
+``restore_checkpoint`` to place restored leaves straight onto the mesh
+instead of round-tripping through a replicated host buffer.
 """
 from __future__ import annotations
 
@@ -85,7 +93,9 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def restore_checkpoint(ckpt_dir: str, template: Pytree,
-                       step: Optional[int] = None) -> tuple[Pytree, int]:
+                       step: Optional[int] = None,
+                       sharding: Optional[Any] = None
+                       ) -> tuple[Pytree, int]:
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -104,4 +114,7 @@ def restore_checkpoint(ckpt_dir: str, template: Pytree,
                 f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
                 f"template {np.shape(leaf)}")
         leaves.append(arr.astype(np.asarray(leaf).dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), int(step)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if sharding is not None:
+        tree = jax.device_put(tree, sharding)
+    return tree, int(step)

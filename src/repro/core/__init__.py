@@ -4,7 +4,7 @@ from repro.core.digest import (MODES, TrainSettings, digest_train, evaluate,
                                prepare_graph_data)
 from repro.core.async_engine import (AsyncSettings, digest_a_train,
                                      sync_time_per_round)
-from repro.core.error_bound import measure_error_and_bound
+from repro.core.error_bound import measure_error_and_bound, quantization_eps
 from repro.core.comm_model import (CommConstants, epoch_comm_bytes,
                                    epoch_time_model, khop_halo_sizes)
 from repro.core import halo_exchange
@@ -15,7 +15,8 @@ __all__ = [
     "MODES", "TrainSettings", "digest_train", "evaluate",
     "full_graph_forward", "init_state", "make_epoch_fn",
     "prepare_graph_data", "AsyncSettings", "digest_a_train",
-    "sync_time_per_round", "measure_error_and_bound", "CommConstants",
+    "sync_time_per_round", "measure_error_and_bound", "quantization_eps",
+    "CommConstants",
     "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes",
     "halo_exchange", "HaloPrecision", "HaloSpec", "stale_store",
 ]

@@ -80,9 +80,24 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         return opt.update(grads, opt_state, params, step)
 
     @jax.jit
-    def push_rows(store, slots, valid, reps):
+    def push_rows(store, slots, valid, reps, sentinel):
+        # Owner-sharded store: this worker's rows (and its padding) all
+        # scatter into its own shard, sentinel included.
         return halo_exchange.push(store, slots[None], valid[None],
-                                  reps[None])
+                                  reps[None], sentinel.reshape(1))
+
+    @jax.jit
+    def push_rows_ef(store, slots, valid, reps, residual, sentinel):
+        new_store, new_res = halo_exchange.push_ef(
+            store, slots[None], valid[None], reps[None], residual[None],
+            sentinel.reshape(1))
+        return new_store, new_res[0]
+
+    # Per-worker rounding residuals (error-feedback pushes): each worker
+    # compensates its own repeated pushes, the motivating async scenario.
+    S = int(data["local_ids"].shape[1])
+    push_residual = [jnp.zeros((L1, S, cfg.hidden_dim), jnp.float32)
+                     for _ in range(M)]
 
     x_local_all = np.asarray(data["x_global"])[np.asarray(data["local_ids"])]
     x_halo_all = np.asarray(data["x_global"])[np.asarray(data["halo_ids"])]
@@ -133,8 +148,14 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
         # Periodic PUSH of fresh representations (boundary rows only).
         if (r - 1) % settings.sync_interval == 0 and cfg.num_layers > 1:
-            store = push_rows(store, data["local_slots"][m],
-                              data["local_valid"][m], push)
+            if settings.precision.error_feedback:
+                store, push_residual[m] = push_rows_ef(
+                    store, data["local_slots"][m], data["local_valid"][m],
+                    push, push_residual[m], data["sentinel_slots"][m])
+            else:
+                store = push_rows(store, data["local_slots"][m],
+                                  data["local_valid"][m], push,
+                                  data["sentinel_slots"][m])
 
         # Fetch fresh params, schedule next round.
         params_snapshots[m] = params

@@ -12,11 +12,15 @@ The epoch function is a single jitted SPMD program: subgraphs are vmapped on
 CPU and sharded over the mesh "data" axis under pjit (see
 repro.launch.train_gnn), which is the Algorithm-1 `for m in parallel` loop.
 
-Stale state lives in the compact HaloExchange store (boundary rows only,
-pluggable fp32/bf16/int8 precision — see repro.core.halo_exchange).  On
-non-pull epochs the out-of-subgraph aggregation reads the cached compact
-slab *directly* through the fused pull+aggregate kernel; the seed's
-materialized ``(M, L-1, H, hidden)`` per-epoch halo cache is gone.
+Stale state lives in the compact **owner-sharded** HaloExchange store
+(boundary rows only, grouped by owning part, pluggable fp32/bf16/int8
+precision — see repro.core.halo_exchange).  A PULL epoch gathers each
+subgraph's halo rows into a device-local slab ``(M, L-1, H+1, hidden)``
+— via the XLA-partitioned dense gather (all-gather fallback) or the
+explicit ragged ``collective_pull`` when a mesh with one part per device
+is supplied — and non-pull epochs read that local slice *directly*
+through the fused pull+aggregate kernel: nothing is replicated and no
+fp32 halo cache is ever materialized.
 """
 from __future__ import annotations
 
@@ -55,25 +59,38 @@ def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
         [g.features, np.zeros((1, g.features.shape[1]), np.float32)], axis=0)
 
     def _struct(s: StackedPartitions) -> dict:
+        # The out-ELL in per-subgraph halo-slot space addresses the
+        # device-local pulled slabs directly; the store-slot / global-id
+        # remaps live on StackedPartitions for whole-slab consumers.
         return {"in_nbr": jnp.asarray(s.in_nbr),
                 "in_wts": jnp.asarray(s.in_wts),
                 "out_nbr": jnp.asarray(s.out_nbr),
-                "out_wts": jnp.asarray(s.out_wts),
-                # Same out-ELL remapped to compact-store slots / global
-                # ids, so aggregation can gather from shared slabs.
-                "out_nbr_s": jnp.asarray(s.out_nbr_store),
-                "out_nbr_g": jnp.asarray(s.out_nbr_global)}
+                "out_wts": jnp.asarray(s.out_wts)}
 
+    plan = sp.pull_plan()
+    # halo_ids extended with a sentinel column: gathering x_global (or the
+    # full-graph reps) at these ids yields the per-subgraph (H+1)-row halo
+    # slab directly, row H the zero sentinel.
+    halo_ids_x = np.concatenate(
+        [sp.halo_ids, np.full((sp.num_parts, 1), g.num_nodes, np.int32)],
+        axis=1)
     return {
         "x_global": jnp.asarray(x_global),
         "struct": _struct(sp),
         "local_ids": jnp.asarray(sp.local_ids),
         "local_valid": jnp.asarray(sp.local_valid),
         "halo_ids": jnp.asarray(sp.halo_ids),
-        # Compact-store views (HaloExchange slot space).
+        "halo_valid": jnp.asarray(sp.halo_valid),
+        "halo_ids_x": jnp.asarray(halo_ids_x),
+        # Owner-sharded compact-store views (HaloExchange slot space).
         "local_slots": jnp.asarray(sp.local_slots),
+        "local_boundary": jnp.asarray(sp.local_boundary),
         "halo_slots": jnp.asarray(sp.halo_slots),
         "store_ids": jnp.asarray(sp.store_ids),
+        "sentinel_slots": jnp.asarray(sp.sentinel_slots),
+        # Ragged collective-pull routing (PullPlan).
+        "pull_send": jnp.asarray(plan.send_offsets),
+        "pull_recv": jnp.asarray(plan.recv_positions),
         "labels": jnp.asarray(sp.labels),
         "train_mask": jnp.asarray(sp.train_mask),
         "val_mask": jnp.asarray(sp.val_mask),
@@ -139,6 +156,11 @@ class TrainSettings:
     pull_on_first_epoch: bool = False  # paper pulls only at r % N == 0
     # Wire/storage precision of the HaloExchange store (§3.3 byte counts).
     precision: HaloPrecision = HaloPrecision()
+    # PULL transport: "gather" = dense gather (XLA inserts the all-gather
+    # under pjit; exact on any device count), "collective" = explicit
+    # shard_map ragged all_to_all of only the referenced slots (needs a
+    # mesh with one subgraph per "data" device — pass it to make_epoch_fn).
+    pull_mode: str = "gather"
     # LLCG-style server correction (for the partition-based baseline): one
     # extra server-side gradient step per round on a sampled node batch
     # with FULL neighbor information [Ramezani et al. 2021].
@@ -147,70 +169,85 @@ class TrainSettings:
     correction_lr: float = 1e-3
 
 
-def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings
-                  ) -> Callable:
+def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
+                  mesh=None) -> Callable:
     if settings.mode not in MODES:
         raise ValueError(settings.mode)
+    if settings.pull_mode not in ("gather", "collective"):
+        raise ValueError(settings.pull_mode)
+    if settings.pull_mode == "collective" and mesh is None:
+        raise ValueError("pull_mode='collective' needs the mesh")
     loss_fn = make_subgraph_loss(cfg)
 
     def epoch_fn(state: dict, data: dict) -> tuple[dict, dict]:
         r = state["epoch"] + 1            # 1-indexed, as in Algorithm 1
         x_global = data["x_global"]                         # (N+1, d)
         struct = data["struct"]
-        # Layer-0 halo features as a compact boundary slab (B+1, d): every
-        # out-edge target is a boundary node, so out_nbr_s addresses this
-        # slab too and table-wide work (e.g. GAT's projection) stays
-        # O(|boundary|), not O(N).  Row B inherits x_global's zero
-        # sentinel.  The partition baseline drops cross-subgraph
-        # information by zeroing the halo *tables* (this slab; the stale
-        # slab below stays at its zero init), NOT the ELL weights — GAT's
-        # attention denominator and SAGE's mean still see the dropped
-        # neighbors as zero vectors, matching the seed semantics exactly.
-        x_halo_slab = x_global[data["store_ids"]]           # (B+1, d)
+        halo_size = data["halo_ids"].shape[1]
+        # Layer-0 halo features as device-local per-subgraph slabs
+        # (M, H+1, d), row H the zero sentinel (x_global[N]).  The
+        # partition baseline drops cross-subgraph information by zeroing
+        # the halo *tables* (this slab; the stale slab below stays at its
+        # zero init), NOT the ELL weights — GAT's attention denominator
+        # and SAGE's mean still see the dropped neighbors as zero
+        # vectors, matching the seed semantics exactly.
+        x_halo0 = x_global[data["halo_ids_x"]]              # (M, H+1, d)
         if settings.mode == "partition":
-            x_halo_slab = jnp.zeros_like(x_halo_slab)
+            x_halo0 = jnp.zeros_like(x_halo0)
 
         # The stale slab feeding this epoch's out-of-subgraph products —
-        # compact (L-1, B+1, hid) in storage precision, never expanded to
-        # a per-subgraph (M, L-1, H, hid) cache.
+        # device-local (M, L-1, H+1, hid) in storage precision: each
+        # subgraph's slice holds only the halo rows it references, so
+        # per-device residency scales with |halo(G_m)|, not |boundary|.
         if settings.mode == "propagation" and cfg.num_layers > 1:
             # Fresh exchange every epoch: exact reps at current params,
-            # gathered down to the boundary slab.
+            # gathered down to the per-subgraph halo slabs.
             _, reps = full_graph_forward(cfg, state["params"], data)
-            ids = jnp.clip(data["store_ids"], 0, reps[0].shape[0] - 1)
-            slab = jnp.stack([rep[ids] for rep in reps])  # (L-1, B+1, hid)
-            slab = slab.at[:, -1, :].set(0.0)             # zero sentinel
+            ids = jnp.clip(data["halo_ids_x"], 0, reps[0].shape[0] - 1)
+            slab = jnp.stack([rep[ids] for rep in reps], axis=1)
+            hv = jnp.pad(data["halo_valid"], ((0, 0), (0, 1)))
+            slab = jnp.where(hv[:, None, :, None], slab, 0.0)
             q, sc = halo_exchange.quantize_rows(slab, settings.precision)
             cache = {"data": q} if sc is None else {"data": q, "scale": sc}
         elif settings.mode == "digest":
             do_pull = (r % settings.sync_interval == 0)
             if settings.pull_on_first_epoch:
                 do_pull = do_pull | (r == 1)
-            # PULL = snapshot the compact store (O(B·L·d) copy).
-            cache = jax.lax.cond(do_pull, lambda: state["store"],
-                                 lambda: state["cache"])
+            # PULL = collective gather of each subgraph's halo slots from
+            # the owner shards (Algorithm 1 line 5).
+            if settings.pull_mode == "collective":
+                def _pull():
+                    return halo_exchange.collective_pull(
+                        state["store"], data["pull_send"],
+                        data["pull_recv"], halo_size, mesh)
+            else:
+                def _pull():
+                    return halo_exchange.pull_slab(state["store"],
+                                                   data["halo_slots"])
+            cache = jax.lax.cond(do_pull, _pull, lambda: state["cache"])
         else:
             cache = state["cache"]
 
         x_local = x_global[data["local_ids"]]               # (M, S, d)
         n_hidden = cfg.num_layers - 1
 
-        def sub_loss(params, x_loc, struct_m, labels, mask):
-            # Layer 0 gathers raw halo features from the boundary feature
-            # slab; layers ℓ≥1 gather stale reps straight from the compact
-            # store slab — both via the fused pull+aggregate path.
-            tables = [halo_ref(x_halo_slab, None, struct_m["out_nbr_s"],
+        def sub_loss(params, x_loc, x_h0, cache_m, struct_m, labels, mask):
+            # Layer 0 gathers raw halo features from this subgraph's
+            # feature slab; layers ℓ≥1 gather stale reps straight from its
+            # pulled storage-precision slab — both via the fused
+            # pull+aggregate path with the per-subgraph halo-slot ELL.
+            tables = [halo_ref(x_h0, None, struct_m["out_nbr"],
                                struct_m["out_wts"])]
             for ell in range(n_hidden):
                 tables.append(halo_ref(
-                    *halo_exchange.layer_table(cache, ell),
-                    struct_m["out_nbr_s"], struct_m["out_wts"]))
+                    *halo_exchange.layer_table(cache_m, ell),
+                    struct_m["out_nbr"], struct_m["out_wts"]))
             return loss_fn(params, x_loc, tables, struct_m, labels, mask)
 
         vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
-                      in_axes=(None, 0, 0, 0, 0))
+                      in_axes=(None, 0, 0, 0, 0, 0, 0))
         (losses, (push_reps, logits)), grads = vg(
-            state["params"], x_local, struct,
+            state["params"], x_local, x_halo0, cache, struct,
             data["labels"], data["train_mask"])
 
         # Global AGG (Algorithm 1 line 13): uniform average over subgraphs.
@@ -239,25 +276,39 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings
                 corr_grads)
 
         # Periodic PUSH (lines 9–10): epochs r = 1, N+1, 2N+1, ...
+        # Owner-sharded scatter: every row of part m lands in shard m.
         new_store = state["store"]
+        new_residual = state.get("push_residual")
         eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
         if settings.mode == "digest" and cfg.num_layers > 1:
             do_push = ((r - 1) % settings.sync_interval == 0)
             eps = halo_exchange.staleness_error(
                 state["store"], push_reps, data["local_slots"],
-                data["local_valid"])
-            new_store = jax.lax.cond(
-                do_push,
-                lambda: halo_exchange.push(
-                    state["store"], data["local_slots"],
-                    data["local_valid"], push_reps),
-                lambda: state["store"])
+                data["local_boundary"])
+            if settings.precision.error_feedback:
+                new_store, new_residual = jax.lax.cond(
+                    do_push,
+                    lambda: halo_exchange.push_ef(
+                        state["store"], data["local_slots"],
+                        data["local_valid"], push_reps,
+                        state["push_residual"], data["sentinel_slots"]),
+                    lambda: (state["store"], state["push_residual"]))
+            else:
+                new_store = jax.lax.cond(
+                    do_push,
+                    lambda: halo_exchange.push(
+                        state["store"], data["local_slots"],
+                        data["local_valid"], push_reps,
+                        data["sentinel_slots"]),
+                    lambda: state["store"])
 
         train_acc = micro_f1(logits, data["labels"],
                              data["train_mask"].astype(jnp.float32))
         new_state = {"params": params, "opt_state": opt_state,
                      "store": new_store, "cache": cache,
                      "epoch": r, "step": state["step"] + 1}
+        if new_residual is not None:
+            new_state["push_residual"] = new_residual
         metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
                    "staleness_eps": eps}
         return new_state, metrics
@@ -274,18 +325,26 @@ def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0,
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
     num_slots = int(data["store_ids"].shape[0]) - 1
     l1 = max(cfg.num_layers - 1, 1)
-    return {
+    num_parts, s = data["local_ids"].shape
+    halo_size = int(data["halo_ids"].shape[1])
+    state = {
         "params": params,
         "opt_state": opt.init(params),
-        # Authoritative compact store + the last pulled snapshot of it
-        # (both O(|boundary|·L·d); the seed kept an O(M·H·L·d) cache).
+        # Authoritative owner-sharded compact store (O(|boundary|·L·d)
+        # total, 1/M per device) + the device-local pulled halo slabs
+        # (O(Σ_m |halo(G_m)|·L·d) total; the seed kept a replicated
+        # O(M·H·L·d) fp32 cache).
         "store": halo_exchange.init_store(l1, num_slots, cfg.hidden_dim,
                                           precision),
-        "cache": halo_exchange.init_store(l1, num_slots, cfg.hidden_dim,
-                                          precision),
+        "cache": halo_exchange.init_slab(num_parts, l1, halo_size,
+                                         cfg.hidden_dim, precision),
         "epoch": jnp.asarray(0, jnp.int32),
         "step": jnp.asarray(0, jnp.int32),
     }
+    if precision.error_feedback:
+        state["push_residual"] = jnp.zeros((num_parts, l1, s,
+                                            cfg.hidden_dim), jnp.float32)
+    return state
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -10,6 +10,21 @@ Constant estimates (documented, conservative):
   * τ (loss smoothness w.r.t. final representation): ‖W^(L)‖₂ — CE is
     1-Lipschitz-smooth in the logits; the last linear layer maps reps to
     logits.
+
+Quantized storage adds a representation error on top of staleness:
+ε_total^(ℓ) ≤ ε_stale^(ℓ) + ε_quant^(ℓ), with the explicit additive term
+
+  * int8:  ε_quant^(ℓ) = max_v scale_v^(ℓ)/2 · √d — symmetric per-row
+    quantization has per-element error ≤ scale/2, so ℓ₂ row error ≤
+    scale/2·√d (max over the rows other subgraphs actually pull);
+  * bf16:  ε_quant^(ℓ) = max_v ‖h_v^(ℓ)‖₂ · 2⁻⁸ — 8 significand bits
+    give a relative ulp of 2⁻⁷, so round-to-nearest per-element error
+    ≤ half an ulp = 2⁻⁸;
+  * fp32:  0.
+
+``measure_error_and_bound`` reports the Theorem-1 bound with the measured
+ε (which silently absorbs rounding) *and* ``bound_with_quant`` built from
+ε + ε_quant — the corrected bound quantized modes should be judged by.
 """
 from __future__ import annotations
 
@@ -58,11 +73,36 @@ def fresh_halo_cache(cfg: GNNConfig, params: Pytree, data: dict
     return jnp.swapaxes(fresh[:, data["halo_ids"], :], 0, 1)
 
 
+def quantization_eps(store: dict, data: dict) -> np.ndarray:
+    """Per-layer ε_quant^(ℓ) of the store's precision over *pulled* rows.
+
+    int8: max served scale/2·√d; bf16: max served row norm · 2⁻⁸
+    (half-ulp of the 8-bit significand); fp32: zeros.  Only rows some
+    subgraph actually pulls participate (padding slots carry init values
+    that would inflate the max).
+    """
+    precision = halo_exchange.precision_of(store)
+    l1 = store["data"].shape[0]
+    hv = data["halo_valid"]                                  # (M, H)
+    if precision.storage == "int8":
+        d = store["data"].shape[-1]
+        sc = store["scale"][:, data["halo_slots"], 0]        # (L-1, M, H)
+        sc = jnp.where(hv[None], sc, 0.0)
+        return np.asarray(jnp.max(sc, axis=(1, 2))) / 2.0 * np.sqrt(d)
+    if precision.storage == "bf16":
+        rows = store["data"][:, data["halo_slots"], :].astype(jnp.float32)
+        norms = jnp.linalg.norm(rows, axis=-1)               # (L-1, M, H)
+        norms = jnp.where(hv[None], norms, 0.0)
+        return np.asarray(jnp.max(norms, axis=(1, 2))) * 2.0 ** -8
+    return np.zeros((l1,), np.float64)
+
+
 def measure_error_and_bound(cfg: GNNConfig, params: Pytree, data: dict,
                             store: dict) -> dict:
     """Compare the DIGEST gradient (stale halo from the compact HaloExchange
     `store`) against the exact gradient (fresh halo), and evaluate the
-    Theorem-1 bound."""
+    Theorem-1 bound — plus its quantization-corrected form for bf16/int8
+    storage."""
     stale_cache = halo_exchange.pull(store, data["halo_slots"])
     fresh_cache = fresh_halo_cache(cfg, params, data)
 
@@ -73,6 +113,7 @@ def measure_error_and_bound(cfg: GNNConfig, params: Pytree, data: dict,
     # ε^(ℓ): max over *used* (halo) nodes of the rep difference.
     diff = jnp.linalg.norm(fresh_cache - stale_cache, axis=-1)  # (M,L-1,H)
     eps = np.asarray(jnp.max(diff, axis=(0, 2)))                # (L-1,)
+    eps_quant = quantization_eps(store, data)                   # (L-1,)
 
     # Lipschitz-constant estimates.
     L = cfg.num_layers
@@ -92,14 +133,20 @@ def measure_error_and_bound(cfg: GNNConfig, params: Pytree, data: dict,
     delta_m = np.asarray(jnp.max(deg, axis=-1)).astype(np.float64)  # (M,)
 
     M = delta_m.shape[0]
-    bound = 0.0
-    for ell in range(1, L):           # ℓ = 1..L-1
-        power = L - ell
-        bound += (eps[ell - 1] * (r1 * r2) ** power
-                  * np.sum(delta_m ** power))
-    bound *= tau / M
 
-    return {"err_measured": float(err), "bound": float(bound),
-            "eps": eps.tolist(), "r2": r2, "tau": tau,
+    def _bound(eps_arr: np.ndarray) -> float:
+        eps_arr = np.asarray(eps_arr, np.float64)
+        total = 0.0
+        for ell in range(1, L):       # ℓ = 1..L-1
+            power = L - ell
+            total += (eps_arr[ell - 1] * (r1 * r2) ** power
+                      * np.sum(delta_m ** power))
+        return float(total * tau / M)
+
+    return {"err_measured": float(err), "bound": _bound(eps),
+            "bound_with_quant": _bound(eps + eps_quant),
+            "eps": eps.tolist(), "eps_quant": eps_quant.tolist(),
+            "storage": halo_exchange.precision_of(store).storage,
+            "r2": r2, "tau": tau,
             "delta_max": float(delta_m.max()),
             "grad_norm_fresh": _tree_norm(g_fresh)}

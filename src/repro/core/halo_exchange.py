@@ -1,24 +1,41 @@
-"""HaloExchange — DIGEST's stale-representation KVS, compact and precision-aware.
+"""HaloExchange — DIGEST's stale-representation KVS, owner-sharded and
+precision-aware.
 
 This subsystem implements the PUSH/PULL lines of Algorithm 1 over a
-**compact** slab that holds only *boundary* nodes — rows that appear in at
-least one subgraph's halo — instead of the dense ``(L-1, N+1, hidden)``
-array the seed used.  Mapping to the paper:
+**compact, owner-sharded** slab that holds only *boundary* nodes — rows
+that appear in at least one subgraph's halo — instead of the dense
+``(L-1, N+1, hidden)`` array the seed used.
 
-  * Algorithm 1 line 9–10 (``PUSH h_v^(ℓ) for v ∈ V_m``)  →  :func:`push`:
-    quantize + scatter of locally-owned *boundary* rows into the slab.
-    Non-boundary local rows are dropped — no other subgraph ever reads
-    them, so storing them is pure overhead (this is what shrinks the store
-    from O(N·L·d) to O(|boundary|·L·d), the Fig. 9 memory term).
+Owner-sharded layout (see ``repro.graph.partition.build_partitions``):
+the slot space is M contiguous shards of ``shard_rows`` rows, shard m
+holding exactly the boundary rows *owned* (pushed) by part m, with the
+last row of every shard a per-owner zero sentinel.  Sharded slot-wise
+over the mesh "data" axis, device m therefore stores ``1/M`` of the slab
+and every PUSH scatter is shard-local.  Mapping to the paper:
+
+  * Algorithm 1 line 9–10 (``PUSH h_v^(ℓ) for v ∈ V_m``)  →  :func:`push`
+    (SPMD scatter; the partitioner routes every row of part m into shard
+    m, so writes never cross devices) or :func:`shard_push` (the explicit
+    ``shard_map`` form with owner-local offsets).  Non-boundary local
+    rows are dropped via the owner's sentinel row — no other subgraph
+    ever reads them (this is what shrinks the store from O(N·L·d) to
+    O(|boundary|·L·d), the Fig. 9 memory term).
   * Algorithm 1 line 5 (``PULL h̃_u^(ℓ) for u ∈ halo(G_m)``)  →
-    :func:`pull` (dense gather + dequantize), or — on the TPU hot path —
-    the fused pull+aggregate kernel :func:`repro.kernels.spmm.halo_spmm`,
-    which gathers slab rows directly inside the out-of-subgraph ELL
-    product so no ``(M, L-1, H, hidden)`` halo cache is ever materialized.
-  * §3.3 communication terms  →  :meth:`HaloSpec.comm_bytes`: the per-sync
-    pull cost is ``Σ_m |halo(G_m)| · (L-1) · row_bytes`` and the push cost
-    ``Σ_m |boundary ∩ V_m| · (L-1) · row_bytes`` where ``row_bytes``
-    depends on the wire/storage precision below.
+    :func:`pull_slab` (dense-gather form: under pjit XLA lowers it to an
+    all-gather of the shards — the fallback) or :func:`collective_pull`
+    (the ragged ``shard_map`` form: an ``all_to_all`` that ships only the
+    slots each subgraph's halo actually references, per the
+    :class:`~repro.graph.partition.PullPlan`).  Both return a
+    **device-local** per-subgraph slab ``(M, L-1, H+1, hidden)`` in
+    storage precision — non-pull epochs read this local slice through the
+    fused pull+aggregate kernel :func:`repro.kernels.spmm.halo_spmm`, so
+    nothing replicated and no ``(M, L-1, H, hidden)`` fp32 cache is ever
+    materialized.
+  * §3.3 communication terms  →  :meth:`HaloSpec.comm_bytes`: the ragged
+    pull ships ``Σ_m |halo(G_m)| · (L-1) · row_bytes`` per sync versus
+    ``(M-1) · store_nbytes`` for the replicated snapshot
+    (:meth:`HaloSpec.replicated_pull_nbytes`); pushes ship
+    ``Σ_m |boundary ∩ V_m| · (L-1) · row_bytes``.
   * Theorem 1's per-layer staleness ε^(ℓ)  →  :func:`staleness_error`,
     measured over the rows actually served to other subgraphs.
 
@@ -35,17 +52,20 @@ slab layout (storage) and the §3.3 wire format:
 
 int8 uses symmetric per-row quantization: ``scale = max|row| / 127``,
 ``q = round(row / scale)``; the absolute dequantization error is bounded
-by ``scale / 2 = max|row| / 254`` per element.
+by ``scale / 2 = max|row| / 254`` per element.  With
+``HaloPrecision(error_feedback=True)`` the pusher accumulates the per-row
+rounding residual (:func:`push_ef`), so repeated pushes of slowly-moving
+representations stay unbiased at the same wire cost (Bai et al. 2023).
 
 A store is a plain pytree (dict) so it drops into jitted state, pjit
 shardings and npz checkpoints unchanged:
 
-    {"data": (L-1, B+1, hidden) <storage dtype>}        fp32 / bf16
-    {"data": int8 ..., "scale": (L-1, B+1, 1) float32}  int8
+    {"data": (L-1, R, hidden) <storage dtype>}        fp32 / bf16
+    {"data": int8 ..., "scale": (L-1, R, 1) float32}  int8
 
-Row ``B`` is the zero sentinel: pushes of padding (and of non-boundary
-local rows, whose slot index is ``B``) are routed there and the row is
-re-zeroed, so pulls of padded halo slots are exactly zero.
+where ``R = M · shard_rows``.  Sentinel rows (one per shard; the global
+sentinel is the last row of the last shard) are re-zeroed after every
+push, so pulls of padded halo slots are exactly zero.
 """
 from __future__ import annotations
 
@@ -54,6 +74,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 PRECISIONS = ("fp32", "bf16", "int8")
 
@@ -66,6 +87,10 @@ class HaloPrecision:
     """Wire/storage precision of the halo slab (one knob for both)."""
 
     storage: str = "fp32"          # fp32 | bf16 | int8
+    # Accumulate the per-row quantization residual at the pusher
+    # (push_ef) so repeated pushes stay unbiased.  Only meaningful for
+    # lossy storage (int8 / bf16); a no-op for fp32.
+    error_feedback: bool = False
 
     def __post_init__(self):
         if self.storage not in PRECISIONS:
@@ -90,9 +115,13 @@ class HaloSpec:
     """Static shape/precision metadata of a compact store (accounting)."""
 
     num_hidden_layers: int          # L-1
-    num_slots: int                  # |boundary| (excl. sentinel)
+    num_slots: int                  # |boundary| (excl. sentinels/padding)
     hidden: int
     precision: HaloPrecision = HaloPrecision()
+    # Owner-sharded layout: R = store_rows slab rows over num_shards
+    # devices.  Defaults describe the unsharded (single-sentinel) layout.
+    store_rows: Optional[int] = None
+    num_shards: int = 1
 
     @classmethod
     def from_partitions(cls, sp, hidden: int, num_layers: int,
@@ -100,26 +129,49 @@ class HaloSpec:
                         ) -> "HaloSpec":
         return cls(num_hidden_layers=max(num_layers - 1, 1),
                    num_slots=sp.num_boundary, hidden=hidden,
-                   precision=precision)
+                   precision=precision, store_rows=sp.store_rows,
+                   num_shards=sp.num_parts)
 
     def init(self) -> dict:
-        return init_store(self.num_hidden_layers, self.num_slots,
+        rows = (self.store_rows if self.store_rows is not None
+                else self.num_slots + 1)
+        return init_store(self.num_hidden_layers, rows - 1,
                           self.hidden, self.precision)
 
     # -- §3.3 / Fig. 9 accounting ------------------------------------------
     def store_nbytes(self) -> int:
-        """HBM bytes of the compact slab (incl. sentinel row)."""
-        return (self.num_hidden_layers * (self.num_slots + 1)
+        """Total HBM bytes of the slab (incl. sentinel/padding rows)."""
+        rows = (self.store_rows if self.store_rows is not None
+                else self.num_slots + 1)
+        return (self.num_hidden_layers * rows
                 * self.precision.row_bytes(self.hidden))
+
+    def shard_nbytes(self) -> int:
+        """Per-device resident bytes under the owner-sharded layout."""
+        return self.store_nbytes() // self.num_shards
 
     def dense_nbytes(self, num_nodes: int) -> int:
         """What the seed's dense fp32 ``(L-1, N+1, hidden)`` store costs."""
         return self.num_hidden_layers * (num_nodes + 1) * self.hidden * 4
 
+    def replicated_pull_nbytes(self) -> int:
+        """Wire bytes per sync to replicate the compact slab on every
+        device — the PR-1 snapshot layout's all-gather: each of the M
+        devices receives the other M-1 shards of the *unpadded*
+        (|boundary|+1)-row slab (per-owner shard padding is a storage
+        artifact of this layout, not bytes the replicated baseline
+        shipped)."""
+        return ((self.num_shards - 1) * self.num_hidden_layers
+                * (self.num_slots + 1)
+                * self.precision.row_bytes(self.hidden))
+
     def comm_bytes(self, pull_rows: int, push_rows: int) -> dict:
         """Per-sync §3.3 byte counts under the configured wire precision.
 
-        pull_rows: Σ_m |halo(G_m)| — rows gathered by all subgraphs.
+        pull_rows: Σ_m |halo(G_m)| — rows gathered by all subgraphs (the
+          *information-theoretic* pull cost; the implemented dense
+          all_to_all pads per-pair lists to a common width — see
+          :meth:`collective_pull_nbytes` for what actually hits the wire).
         push_rows: Σ_m |boundary ∩ V_m| — rows scattered by all subgraphs.
         """
         rb = self.precision.row_bytes(self.hidden)
@@ -127,6 +179,16 @@ class HaloSpec:
         push = int(push_rows) * self.num_hidden_layers * rb
         return {"pull_bytes": pull, "push_bytes": push,
                 "total_bytes": pull + push}
+
+    def collective_pull_nbytes(self, plan_max_rows: int) -> int:
+        """Actual wire bytes of one :func:`collective_pull` sync: the
+        all_to_all pads every (owner, requester) pair to the plan's max
+        width K, shipping M·M·K rows.  Close to the ragged ideal
+        (``comm_bytes``'s pull term) for balanced partitions; a skewed
+        pair inflates it — compare both before choosing pull_mode."""
+        return (self.num_shards * self.num_shards * int(plan_max_rows)
+                * self.num_hidden_layers
+                * self.precision.row_bytes(self.hidden))
 
 
 def precision_of(store: dict) -> HaloPrecision:
@@ -166,7 +228,8 @@ def dequantize_rows(data: jax.Array, scale: Optional[jax.Array]
 
 def init_store(num_hidden_layers: int, num_slots: int, hidden: int,
                precision: HaloPrecision = HaloPrecision()) -> dict:
-    """Zero slab; (L-1, B+1, hidden) with the sentinel row at B."""
+    """Zero slab; (L-1, num_slots+1, hidden).  For the owner-sharded
+    layout pass ``num_slots = store_rows - 1`` (sentinel rows included)."""
     store = {"data": jnp.zeros((num_hidden_layers, num_slots + 1, hidden),
                                precision.dtype)}
     if precision.has_scale:
@@ -175,9 +238,26 @@ def init_store(num_hidden_layers: int, num_slots: int, hidden: int,
     return store
 
 
+def init_slab(num_parts: int, num_hidden_layers: int, halo_size: int,
+              hidden: int, precision: HaloPrecision = HaloPrecision()
+              ) -> dict:
+    """Zero per-subgraph halo slab — the device-local pull target:
+    {"data": (M, L-1, H+1, hidden)} with the zero sentinel row at H."""
+    slab = {"data": jnp.zeros(
+        (num_parts, num_hidden_layers, halo_size + 1, hidden),
+        precision.dtype)}
+    if precision.has_scale:
+        slab["scale"] = jnp.ones(
+            (num_parts, num_hidden_layers, halo_size + 1, 1), jnp.float32)
+    return slab
+
+
 def layer_table(store: dict, ell: int
                 ) -> tuple[jax.Array, Optional[jax.Array]]:
-    """(data, scale) slab of hidden layer ``ell`` — feeds the fused kernel."""
+    """(data, scale) slab of hidden layer ``ell`` — feeds the fused kernel.
+
+    Works on both the full store (L-1, R, hidden) and one subgraph's
+    pulled slab (L-1, H+1, hidden)."""
     return store["data"][ell], (store["scale"][ell] if "scale" in store
                                 else None)
 
@@ -185,7 +265,7 @@ def layer_table(store: dict, ell: int
 def pull(store: dict, slots: jax.Array) -> jax.Array:
     """Gather + dequantize stale halo tables (Algorithm 1 line 5).
 
-    slots: (M, H) compact slot ids (sentinel B at padding).
+    slots: (M, H) compact slot ids (sentinel rows at padding).
     Returns (M, L-1, H, hidden) float32.
     """
     out = store["data"][:, slots, :].astype(jnp.float32)   # (L-1, M, H, h)
@@ -194,42 +274,206 @@ def pull(store: dict, slots: jax.Array) -> jax.Array:
     return jnp.swapaxes(out, 0, 1)
 
 
+def pull_slab(store: dict, halo_slots: jax.Array) -> dict:
+    """Collective PULL, dense-gather form (Algorithm 1 line 5).
+
+    Gathers each subgraph's halo rows into a **device-local** slab in
+    storage precision: {"data": (M, L-1, H+1, hidden)[, "scale"]}, slab
+    row H the zero sentinel (``out_nbr`` padding).  Under pjit with the
+    store sharded slot-wise and the result sharded over "data", XLA
+    lowers the gather to an all-gather of the shards — the dense fallback
+    of :func:`collective_pull`; on one device it is a plain gather.
+    """
+    data = jnp.swapaxes(store["data"][:, halo_slots, :], 0, 1)
+    out = {"data": jnp.pad(data, ((0, 0), (0, 0), (0, 1), (0, 0)))}
+    if "scale" in store:
+        sc = jnp.swapaxes(store["scale"][:, halo_slots, :], 0, 1)
+        out["scale"] = jnp.pad(sc, ((0, 0), (0, 0), (0, 1), (0, 0)),
+                               constant_values=1.0)
+    return out
+
+
+def collective_pull(store: dict, send_offsets: jax.Array,
+                    recv_positions: jax.Array, halo_size: int,
+                    mesh, axis: str = "data") -> dict:
+    """Ragged collective PULL: ship only the referenced slots.
+
+    The ``shard_map`` form of :func:`pull_slab` for a store sharded
+    slot-wise over ``axis`` with one subgraph per device: every owner
+    gathers from its local shard the rows each requester's halo
+    references (per the :class:`~repro.graph.partition.PullPlan`) and a
+    single ``all_to_all`` routes them.  Per-pair lists are padded to the
+    plan's max width K, so the wire carries ``M·M·K`` rows
+    (:meth:`HaloSpec.collective_pull_nbytes`) — ≈ ``Σ_m |halo(G_m)|``
+    for balanced partitions, vs the ``(M-1)·(B+1)`` rows of replicating
+    the slab.
+
+    Args:
+      send_offsets:   (M, M, K) PullPlan.send_offsets.
+      recv_positions: (M, M, K) PullPlan.recv_positions.
+      halo_size: H — per-subgraph halo slots (slab gets H+1 rows).
+    Returns the same pytree as :func:`pull_slab`.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    num = mesh.shape[axis]
+    M, _, K = send_offsets.shape
+    if num != M:
+        raise ValueError(f"collective_pull needs one part per device "
+                         f"(mesh {axis}={num}, parts={M}); use pull_slab")
+    l1, _, hidden = store["data"].shape
+    has_scale = "scale" in store
+
+    def _exchange(table, send, recv, width, pad_value):
+        # table (l1, shard_rows, width) — this owner's shard.
+        rows = table[:, send[0].reshape(-1), :]            # (l1, M*K, w)
+        rows = rows.reshape(l1, M, K, width)
+        buf = jnp.transpose(rows, (1, 2, 0, 3))            # (M, K, l1, w)
+        got = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+        slab = jnp.full((l1, halo_size + 1, width), pad_value, table.dtype)
+        vals = jnp.moveaxis(got.reshape(M * K, l1, width), 0, 1)
+        # Duplicate positions only occur at the sentinel row H, where
+        # every routed value is an owner-sentinel zero row.
+        return slab.at[:, recv[0].reshape(-1), :].set(vals)[None]
+
+    shard = P(None, axis, None)
+    plan = P(axis, None, None)
+    slab_spec = P(axis, None, None, None)
+
+    if has_scale:
+        def _body(data, scale, send, recv):
+            return {"data": _exchange(data, send, recv, hidden, 0),
+                    "scale": _exchange(scale, send, recv, 1, 1.0)}
+        fn = shard_map(_body, mesh=mesh,
+                       in_specs=(shard, shard, plan, plan),
+                       out_specs={"data": slab_spec, "scale": slab_spec})
+        return fn(store["data"], store["scale"], send_offsets,
+                  recv_positions)
+
+    def _body(data, send, recv):
+        return {"data": _exchange(data, send, recv, hidden, 0)}
+    fn = shard_map(_body, mesh=mesh, in_specs=(shard, plan, plan),
+                   out_specs={"data": slab_spec})
+    return fn(store["data"], send_offsets, recv_positions)
+
+
 def push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
-         reps: jax.Array) -> dict:
+         reps: jax.Array, sentinels: Optional[jax.Array] = None) -> dict:
     """Quantize + scatter fresh local boundary rows (Algorithm 1 lines 9–10).
 
-    local_slots: (M, S) compact slot ids — ``B`` for padding *and* for
-      non-boundary local nodes (both are dropped via the sentinel row).
+    local_slots: (M, S) compact slot ids — part m's *own* sentinel row for
+      non-boundary local nodes (the partitioner routes them there so every
+      write stays inside the owner shard).
     local_valid: (M, S) bool; reps: (M, L-1, S, hidden) fp32.
+    sentinels: (M,) per-part sentinel slots (re-zeroed after the scatter);
+      defaults to the single last row for the unsharded layout.
     """
     data = store["data"]
     l1, rows, hidden = data.shape
-    b = rows - 1
+    if sentinels is None:
+        sentinels = jnp.asarray([rows - 1], jnp.int32)
+    sentinels = jnp.asarray(sentinels, jnp.int32).reshape(-1)
     m, s = local_slots.shape
-    ids = jnp.where(local_valid, local_slots, b).reshape(-1)
+    per_part = sentinels if sentinels.size == m else sentinels[:1]
+    fallback = jnp.broadcast_to(per_part.reshape(-1, 1), (m, s))
+    ids = jnp.where(local_valid, local_slots, fallback).reshape(-1)
     vals = jnp.where(local_valid[:, None, :, None], reps, 0.0)
     q, scale = quantize_rows(vals, precision_of(store))
     q = jnp.swapaxes(q, 0, 1).reshape(l1, m * s, hidden)
-    new = {"data": data.at[:, ids, :].set(q).at[:, b, :].set(0)}
+    new = {"data": data.at[:, ids, :].set(q).at[:, sentinels, :].set(0)}
     if scale is not None:
         scale = jnp.swapaxes(scale, 0, 1).reshape(l1, m * s, 1)
         new["scale"] = (store["scale"].at[:, ids, :].set(scale)
-                        .at[:, b, :].set(1.0))
+                        .at[:, sentinels, :].set(1.0))
     return new
 
 
+def push_ef(store: dict, local_slots: jax.Array, local_valid: jax.Array,
+            reps: jax.Array, residual: jax.Array,
+            sentinels: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
+    """Error-feedback PUSH: quantize ``reps + residual`` and carry the new
+    rounding residual forward at the pusher (Bai et al. 2023 style).
+
+    Deterministic round-to-nearest biases repeated pushes of
+    slowly-moving representations; compensating each push with the
+    previous rounding error keeps the time-averaged served value unbiased
+    at the same wire cost.  ``residual`` has the shape of ``reps``;
+    returns (new_store, new_residual).
+    """
+    compensated = reps + residual
+    new_store = push(store, local_slots, local_valid, compensated,
+                     sentinels)
+    # Same masked tensor push() quantizes internally, so XLA CSEs the two
+    # quantize passes under jit; invalid rows are 0 → residual 0.
+    masked = jnp.where(local_valid[:, None, :, None], compensated, 0.0)
+    q, scale = quantize_rows(masked, precision_of(store))
+    return new_store, masked - dequantize_rows(q, scale)
+
+
+def shard_push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
+               reps: jax.Array, shard_rows: int, mesh,
+               axis: str = "data") -> dict:
+    """Explicit shard-local PUSH under ``shard_map``: device m scatters its
+    rows with owner-local offsets into its own shard — structurally
+    incapable of writing another device's slots.  Requires one part per
+    device; :func:`push` is the SPMD fallback (same math, the partitioner
+    already routes every row into the owner shard)."""
+    from jax.experimental.shard_map import shard_map
+
+    num = mesh.shape[axis]
+    M = local_slots.shape[0]
+    if num != M:
+        raise ValueError(f"shard_push needs one part per device "
+                         f"(mesh {axis}={num}, parts={M}); use push")
+    prec = precision_of(store)
+    has_scale = "scale" in store
+
+    def _scatter(data, scale, slots, valid, reps_blk):
+        # data (l1, shard_rows, hid) — this device's shard; reps_blk
+        # (1, l1, S, hid); every slot of part j lies inside shard j.
+        j = jax.lax.axis_index(axis)
+        off = jnp.where(valid[0], slots[0] - j * shard_rows,
+                        shard_rows - 1)
+        vals = jnp.where(valid[0][None, :, None], reps_blk[0], 0.0)
+        q, sc = quantize_rows(vals, prec)
+        new = {"data": data.at[:, off, :].set(q).at[:, -1, :].set(0)}
+        if sc is not None:
+            new["scale"] = (scale.at[:, off, :].set(sc)
+                            .at[:, -1, :].set(1.0))
+        return new
+
+    shard = P(None, axis, None)
+    m_spec = P(axis, None)
+    reps_spec = P(axis, None, None, None)
+
+    if has_scale:
+        fn = shard_map(_scatter, mesh=mesh,
+                       in_specs=(shard, shard, m_spec, m_spec, reps_spec),
+                       out_specs={"data": shard, "scale": shard})
+        return fn(store["data"], store["scale"], local_slots, local_valid,
+                  reps)
+
+    def _body(data, slots, valid, reps_blk):
+        return _scatter(data, None, slots, valid, reps_blk)
+
+    fn = shard_map(_body, mesh=mesh,
+                   in_specs=(shard, m_spec, m_spec, reps_spec),
+                   out_specs={"data": shard})
+    return fn(store["data"], local_slots, local_valid, reps)
+
+
 def staleness_error(store: dict, fresh: jax.Array, local_slots: jax.Array,
-                    local_valid: jax.Array) -> jax.Array:
+                    served: jax.Array) -> jax.Array:
     """ε^(ℓ) = max_v ‖h_v^(ℓ) − h̃_v^(ℓ)‖₂ over *served* (boundary) rows.
 
     fresh: (M, L-1, S, hidden) this epoch's representations.
-    Returns (L-1,) per-hidden-layer max error.  Only rows present in the
-    compact store participate — exactly the rows whose staleness other
-    subgraphs can observe (Theorem 1 only involves pulled halo rows).
+    served: (M, S) bool — valid local rows present in the compact store
+      (``StackedPartitions.local_boundary``): exactly the rows whose
+      staleness other subgraphs can observe (Theorem 1 only involves
+      pulled halo rows).
+    Returns (L-1,) per-hidden-layer max error.
     """
-    b = store["data"].shape[1] - 1
     stale = pull(store, local_slots)                   # (M, L-1, S, h)
     diff = jnp.linalg.norm(fresh - stale, axis=-1)     # (M, L-1, S)
-    served = local_valid & (local_slots < b)
     diff = jnp.where(served[:, None, :], diff, 0.0)
     return jnp.max(diff, axis=(0, 2))

@@ -1,14 +1,15 @@
 from repro.graph.graph import (EllMatrix, Graph, coo_to_ell, from_edges,
                                gcn_norm_weights)
-from repro.graph.partition import (StackedPartitions, build_partitions,
-                                   edge_cut, greedy_partition,
+from repro.graph.partition import (PullPlan, StackedPartitions,
+                                   build_partitions, edge_cut,
+                                   greedy_partition, partition_report,
                                    random_partition)
 from repro.graph.generators import (DATASETS, make_dataset, powerlaw_graph,
                                     sbm_graph)
 
 __all__ = [
     "EllMatrix", "Graph", "coo_to_ell", "from_edges", "gcn_norm_weights",
-    "StackedPartitions", "build_partitions", "edge_cut", "greedy_partition",
-    "random_partition", "DATASETS", "make_dataset", "powerlaw_graph",
-    "sbm_graph",
+    "PullPlan", "StackedPartitions", "build_partitions", "edge_cut",
+    "greedy_partition", "partition_report", "random_partition", "DATASETS",
+    "make_dataset", "powerlaw_graph", "sbm_graph",
 ]

@@ -84,9 +84,49 @@ PARTITIONERS = {"greedy": greedy_partition, "random": random_partition,
                 "metis": greedy_partition}
 
 
+def partition_report(g: Graph, sp: "StackedPartitions") -> dict:
+    """Partition quality by what the compact store actually pays for.
+
+    Edge cut is the classic METIS objective, but §3.3's wire cost scales
+    with Σ_m |halo(G_m)| (rows pulled per sync) and the store residency
+    with |boundary| (union of halos) — two partitions with equal cut can
+    differ a lot on both.  Reported side by side so fig9 scores the real
+    cost drivers.
+    """
+    sizes = sp.local_valid.sum(axis=1).astype(np.float64)
+    return {
+        "edge_cut": edge_cut(g, sp.assign),
+        "halo_rows": sp.pull_rows(),              # Σ_m |halo(G_m)|
+        "boundary": sp.num_boundary,              # |∪_m halo(G_m)|
+        "boundary_frac": sp.boundary_fraction(),
+        "balance": float(sizes.max() / max(sizes.mean(), 1.0)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Stacked per-subgraph views
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PullPlan:
+    """Ragged per-(owner, requester) routing of the collective halo pull.
+
+    For every requester m and owner j, the plan lists which rows of owner
+    j's store *shard* feed subgraph m's halo slab, padded to a common
+    width ``max_rows`` so the exchange is one dense ``all_to_all``:
+
+      send_offsets[j, m, k]   owner-local row offset (< shard_rows) of the
+                              k-th row owner j ships to requester m;
+                              padding points at owner j's zero sentinel.
+      recv_positions[m, j, k] halo-slab position (< H+1) where requester m
+                              lands that row; padding points at slab row H
+                              (the slab's zero sentinel).
+    """
+
+    max_rows: int                 # K — padded per-pair row count
+    send_offsets: np.ndarray      # (M_owner, M_req, K) int32
+    recv_positions: np.ndarray    # (M_req, M_owner, K) int32
+
 
 @dataclasses.dataclass
 class StackedPartitions:
@@ -95,14 +135,23 @@ class StackedPartitions:
     Sentinel id == num_nodes (a zero row is appended to every global table).
 
     Boundary / compact-store views: the **boundary set** is the union of
-    all subgraph halos — the only rows the stale store ever serves.  The
-    global→slot map (``store_map``) lets the HaloExchange subsystem keep a
-    compact ``(L-1, |boundary|+1, hidden)`` slab instead of a dense
-    ``(L-1, N+1, hidden)`` array; slot ``num_boundary`` is the sentinel.
+    all subgraph halos — the only rows the stale store ever serves.  Slots
+    are **owner-sharded**: every boundary node is owned by the part it is
+    local to, and the slot space is laid out as M contiguous shards of
+    ``shard_rows`` rows each (``slot = owner · shard_rows + rank``), the
+    last row of every shard a per-owner zero sentinel.  Device m of a
+    "data"-sharded mesh therefore holds exactly the rows it pushes, and a
+    pull is a collective gather of each subgraph's halo slots from the
+    owner shards (see ``repro.core.halo_exchange``).  ``store_map`` sends
+    non-boundary ids (and the global sentinel id N) to the *global*
+    sentinel slot ``M·shard_rows − 1``.
     """
 
     num_nodes: int
     num_parts: int
+    num_boundary: int        # |boundary| — true boundary nodes, no padding
+    shard_rows: int          # rows per owner shard (incl. its sentinel row)
+    assign: np.ndarray       # (N,) int32 node → owning part
     local_ids: np.ndarray    # (M, S) int32, global node id or sentinel
     local_valid: np.ndarray  # (M, S) bool
     halo_ids: np.ndarray     # (M, H) int32, global node id or sentinel
@@ -115,13 +164,16 @@ class StackedPartitions:
     train_mask: np.ndarray   # (M, S) bool (False at padding)
     val_mask: np.ndarray     # (M, S) bool
     test_mask: np.ndarray    # (M, S) bool
-    # Compact-store (boundary) indexing, emitted for HaloExchange.
-    store_map: np.ndarray    # (N+1,) int32 global id → slot or B sentinel
-    store_ids: np.ndarray    # (B+1,) int32 slot → global id, [B] == N
+    # Owner-sharded compact-store indexing, emitted for HaloExchange.
+    store_map: np.ndarray    # (N+1,) int32 global id → slot (sentinel: R-1)
+    store_ids: np.ndarray    # (R,) int32 slot → global id, N at pad rows
+    store_owner: np.ndarray  # (R,) int32 slot → owner part
+    sentinel_slots: np.ndarray  # (M,) int32 per-part sentinel slot
     halo_slots: np.ndarray   # (M, H) int32 store slot of each halo entry
     local_slots: np.ndarray  # (M, S) int32 store slot of each local row
-                             #   (B where the local node is not boundary)
-    out_nbr_store: np.ndarray   # (M, S, Dout) int32 → store slot or B
+                             #   (part m's sentinel where not boundary)
+    local_boundary: np.ndarray  # (M, S) bool valid AND boundary (served)
+    out_nbr_store: np.ndarray   # (M, S, Dout) int32 → store slot or R-1
     out_nbr_global: np.ndarray  # (M, S, Dout) int32 → global id or N
 
     @property
@@ -133,8 +185,9 @@ class StackedPartitions:
         return self.halo_ids.shape[1]
 
     @property
-    def num_boundary(self) -> int:
-        return len(self.store_ids) - 1
+    def store_rows(self) -> int:
+        """Total slab rows R = num_parts · shard_rows (incl. sentinels)."""
+        return len(self.store_ids)
 
     def halo_ratio(self) -> np.ndarray:
         """Paper Fig. 9 metric: |out-of-subgraph| / |in-subgraph| per part."""
@@ -147,12 +200,30 @@ class StackedPartitions:
 
     def push_rows(self) -> int:
         """Σ_m |boundary ∩ V_m| — rows shipped per PUSH sync (§3.3)."""
-        return int((self.local_valid
-                    & (self.local_slots < self.num_boundary)).sum())
+        return int(self.local_boundary.sum())
 
     def pull_rows(self) -> int:
         """Σ_m |halo(G_m)| — rows shipped per PULL sync (§3.3)."""
         return int(self.halo_valid.sum())
+
+    def pull_plan(self) -> PullPlan:
+        """Ragged collective-pull routing (see :class:`PullPlan`)."""
+        M, sr = self.num_parts, self.shard_rows
+        owner_of = self.halo_slots // sr                  # (M, H)
+        counts = np.zeros((M, M), np.int64)
+        for m in range(M):
+            np.add.at(counts[m], owner_of[m][self.halo_valid[m]], 1)
+        K = max(int(counts.max()), 1)
+        send_off = np.full((M, M, K), sr - 1, np.int32)
+        recv_pos = np.full((M, M, K), self.halo_size, np.int32)
+        for m in range(M):                                # requester
+            for j in range(M):                            # owner
+                sel = np.where(self.halo_valid[m] & (owner_of[m] == j))[0]
+                send_off[j, m, :len(sel)] = (
+                    self.halo_slots[m, sel] - j * sr)
+                recv_pos[m, j, :len(sel)] = sel
+        return PullPlan(max_rows=K, send_offsets=send_off,
+                        recv_positions=recv_pos)
 
 
 def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
@@ -237,17 +308,38 @@ def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
         va[m, :len(loc)] = g.val_mask[loc]
         te[m, :len(loc)] = g.test_mask[loc]
 
-    # Boundary set = union of all halos; global→compact-slot map for the
-    # HaloExchange store (slot B is the sentinel, like id n globally).
+    # Boundary set = union of all halos, laid out **owner-sharded**: part
+    # m's locally-owned boundary nodes occupy the contiguous slot range
+    # [m·shard_rows, m·shard_rows + |owned_m|), the last row of each shard
+    # is that owner's zero sentinel, and the global sentinel (non-boundary
+    # ids and id n) is the last row of the last shard.  Sharding the slab
+    # slot-wise over the mesh "data" axis then gives every device exactly
+    # the rows it pushes; pulls gather from the owner shards.
     boundary = (np.unique(np.concatenate(parts_halo))
                 if any(len(h) for h in parts_halo)
                 else np.empty(0, np.int32)).astype(np.int32)
     B = len(boundary)
-    store_map = np.full(n + 1, B, np.int32)
-    store_map[boundary] = np.arange(B, dtype=np.int32)
-    store_ids = np.concatenate([boundary, [n]]).astype(np.int32)
+    owned = [np.sort(boundary[assign[boundary] == m])
+             for m in range(num_parts)]
+    shard_rows = _pad_to(max((len(o) for o in owned), default=0) + 1)
+    R = num_parts * shard_rows
+    store_map = np.full(n + 1, R - 1, np.int32)
+    store_ids = np.full(R, n, np.int32)
+    store_owner = np.repeat(np.arange(num_parts, dtype=np.int32),
+                            shard_rows)
+    for m, o in enumerate(owned):
+        slots = m * shard_rows + np.arange(len(o), dtype=np.int32)
+        store_map[o] = slots
+        store_ids[slots] = o
+    sentinel_slots = ((np.arange(num_parts, dtype=np.int32) + 1)
+                      * shard_rows - 1)
     halo_slots = store_map[halo_ids]
-    local_slots = store_map[local_ids]
+    raw_slots = store_map[local_ids]
+    local_boundary = local_valid & (raw_slots != R - 1)
+    # Non-boundary / padding local rows push into the *owner's* sentinel
+    # row so scatters never leave the device-local shard.
+    local_slots = np.where(local_boundary, raw_slots,
+                           sentinel_slots[:, None]).astype(np.int32)
 
     # Per-part remaps of the out-ELL: halo-slot → store-slot / global id,
     # so the out-of-subgraph product can gather straight from the shared
@@ -255,17 +347,20 @@ def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
     out_nbr_store = np.empty_like(out_nbr)
     out_nbr_global = np.empty_like(out_nbr)
     for m in range(num_parts):
-        ext_s = np.concatenate([halo_slots[m], [B]]).astype(np.int32)
+        ext_s = np.concatenate([halo_slots[m], [R - 1]]).astype(np.int32)
         ext_g = np.concatenate([halo_ids[m], [n]]).astype(np.int32)
         out_nbr_store[m] = ext_s[out_nbr[m]]
         out_nbr_global[m] = ext_g[out_nbr[m]]
 
     return StackedPartitions(
-        num_nodes=n, num_parts=num_parts,
+        num_nodes=n, num_parts=num_parts, num_boundary=B,
+        shard_rows=shard_rows, assign=assign,
         local_ids=local_ids, local_valid=local_valid,
         halo_ids=halo_ids, halo_valid=halo_valid,
         in_nbr=in_nbr, in_wts=in_wts, out_nbr=out_nbr, out_wts=out_wts,
         labels=labels, train_mask=tr, val_mask=va, test_mask=te,
-        store_map=store_map, store_ids=store_ids,
+        store_map=store_map, store_ids=store_ids, store_owner=store_owner,
+        sentinel_slots=sentinel_slots,
         halo_slots=halo_slots, local_slots=local_slots,
+        local_boundary=local_boundary,
         out_nbr_store=out_nbr_store, out_nbr_global=out_nbr_global)

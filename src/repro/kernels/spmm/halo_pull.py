@@ -13,11 +13,29 @@ row block reads exactly the slab rows its edges touch, and int8 rows are
 dequantized in-register (VMEM traffic shrinks by the same 2–4× as the
 §3.3 wire format).
 
-Grid/block design matches ``spmm.py``: grid = (row_blocks, feature_blocks),
-the slab carried per feature-block into VMEM — int8 slabs fit 4× more rows
-in the same VMEM budget.  Per-row scales ride along as a (rows, 1) fp32
-column and are folded into the edge weight (``w · scale[idx]``) before the
-FMA, so the inner loop stays a gather + single fused multiply-add.
+Two grid/block designs share one inner loop:
+
+  * **Resident** (:func:`halo_spmm_pallas`): grid = (row_blocks,
+    feature_blocks), the slab carried whole per feature-block into VMEM —
+    int8 slabs fit 4× more rows in the same VMEM budget.  Right while the
+    128-wide slab stripe is ≲ a few MiB (B ≲ 8k fp32 rows).
+  * **Streaming** (:func:`halo_spmm_stream_pallas`): grid = (row_blocks,
+    feature_blocks, slab_chunks) under a ``PrefetchScalarGridSpec`` whose
+    scalar-prefetch argument carries the per-chunk base rows.  The slab
+    enters in ``chunk_rows``-row tiles; because the chunk axis is the
+    innermost grid dimension and the output block index is chunk-
+    invariant, Pallas keeps the accumulator tile resident in VMEM and its
+    pipeline double-buffers the HBM→VMEM DMA of chunk c+1 behind the
+    gather/FMA of chunk c.  VMEM residency is O(chunk) instead of O(B),
+    so web-scale boundary slabs stream at full DMA bandwidth.  Each chunk
+    contributes only the edges whose slot falls inside it (out-of-chunk
+    gathers are masked to weight 0), and partial sums accumulate in fp32
+    across chunks — bitwise-reassociated vs. the resident kernel, equal
+    within dtype tolerance.
+
+Per-row scales ride along as a (rows, 1) fp32 column and are folded into
+the edge weight (``w · scale[idx]``) before the FMA, so the inner loop
+stays a gather + single fused multiply-add in both designs.
 """
 from __future__ import annotations
 
@@ -26,8 +44,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.spmm.spmm import BLOCK_F, BLOCK_ROWS, spmm_pallas
+
+# Streaming-variant tile height: 512 fp32 rows × 128-wide stripe = 256 KiB
+# per buffer (×2 for the double buffer) — far under the 16 MiB VMEM budget
+# while long enough to amortize DMA issue latency.
+STREAM_CHUNK_ROWS = 512
 
 
 def _halo_kernel_scaled(nbr_ref, wts_ref, data_ref, scale_ref, out_ref):
@@ -87,3 +111,89 @@ def halo_spmm_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
         out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
         interpret=interpret,
     )(nbr, wts, data, scale)
+
+
+def _make_stream_kernel(chunk_rows: int):
+    def kernel(base_ref, nbr_ref, wts_ref, data_ref, scale_ref, out_ref):
+        c = pl.program_id(2)
+
+        @pl.when(c == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        base = base_ref[c]
+        deg = nbr_ref.shape[1]
+        table = data_ref[...]                    # (chunk_rows, BF) tile
+        scale = scale_ref[...][:, 0]             # (chunk_rows,)
+
+        def body(k, acc):
+            idx = nbr_ref[:, k] - base
+            hit = (idx >= 0) & (idx < chunk_rows)
+            idx = jnp.where(hit, idx, 0)
+            gathered = jnp.take(table, idx, axis=0).astype(jnp.float32)
+            w = (wts_ref[:, k].astype(jnp.float32)
+                 * jnp.take(scale, idx, axis=0)
+                 * hit.astype(jnp.float32))
+            return acc + w[:, None] * gathered
+
+        acc = jax.lax.fori_loop(0, deg, body,
+                                jnp.zeros(out_ref.shape, jnp.float32))
+        out_ref[...] += acc
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_rows", "interpret"))
+def halo_spmm_stream_pallas(nbr: jax.Array, wts: jax.Array,
+                            data: jax.Array, scale: jax.Array = None,
+                            chunk_rows: int = STREAM_CHUNK_ROWS,
+                            interpret: bool = True) -> jax.Array:
+    """Streaming fused pull+aggregate: the slab never resides in VMEM.
+
+    Same contract as :func:`halo_spmm_pallas`, but the slab is tiled into
+    ``chunk_rows``-row chunks streamed through VMEM by the Pallas
+    pipeline (double-buffered HBM→VMEM DMA on TPU) while the output tile
+    accumulates in place.  Handles slabs far beyond the VMEM-resident
+    limit; fp32 accumulation is reassociated across chunks, so results
+    match the resident kernel within dtype tolerance (exactly for the
+    sub-sums inside one chunk).
+    """
+    rows, deg = nbr.shape
+    n_tab, feat = data.shape
+    br = min(BLOCK_ROWS, rows)
+    bf = min(BLOCK_F, feat)
+    if rows % br or feat % bf:
+        raise ValueError(f"rows={rows} feat={feat} must be divisible by "
+                         f"block ({br},{bf}); pad upstream")
+    if scale is None:
+        scale = jnp.ones((n_tab, 1), jnp.float32)
+    # Pad the slab (and scales) to a whole number of chunks; padding rows
+    # are all-zero and no index ever reaches them.
+    pad = (-n_tab) % chunk_rows
+    if pad:
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)), constant_values=1.0)
+    n_chunks = (n_tab + pad) // chunk_rows
+    chunk_base = jnp.arange(n_chunks, dtype=jnp.int32) * chunk_rows
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        # Chunk axis innermost: the output block index is chunk-invariant,
+        # so the accumulator tile stays in VMEM while slab chunks stream
+        # past it (the pipeline prefetches chunk c+1 during chunk c).
+        grid=(rows // br, feat // bf, n_chunks),
+        in_specs=[
+            pl.BlockSpec((br, deg), lambda i, j, c, b: (i, 0)),
+            pl.BlockSpec((br, deg), lambda i, j, c, b: (i, 0)),
+            pl.BlockSpec((chunk_rows, bf), lambda i, j, c, b: (c, j)),
+            pl.BlockSpec((chunk_rows, 1), lambda i, j, c, b: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bf), lambda i, j, c, b: (i, j)),
+    )
+    return pl.pallas_call(
+        _make_stream_kernel(chunk_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+        interpret=interpret,
+    )(chunk_base, nbr, wts, data, scale)

@@ -4,6 +4,13 @@ Dispatch: ``backend="auto"`` uses the Pallas kernel on TPU and the pure-jnp
 reference on CPU (interpret-mode Pallas is Python-slow; the oracle is the
 same math).  Tests pin ``backend="pallas_interpret"`` to validate the kernel
 body itself.
+
+``halo_spmm``'s Pallas path picks between the VMEM-resident kernel and the
+streaming double-buffered one automatically: if the slab's 128-wide
+feature stripe would exceed ``RESIDENT_STRIPE_MAX_BYTES`` of VMEM it
+streams in ``STREAM_CHUNK_ROWS`` tiles instead.  Pin
+``backend="pallas_stream"`` / ``"pallas_stream_interpret"`` to force the
+streaming variant (tests / benchmarks).
 """
 from __future__ import annotations
 
@@ -12,9 +19,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmm.halo_pull import halo_spmm_pallas
+from repro.kernels.spmm.halo_pull import (STREAM_CHUNK_ROWS,
+                                          halo_spmm_pallas,
+                                          halo_spmm_stream_pallas)
 from repro.kernels.spmm.ref import halo_spmm_ref, spmm_ref
-from repro.kernels.spmm.spmm import spmm_pallas
+from repro.kernels.spmm.spmm import BLOCK_F, spmm_pallas
+
+# Largest slab stripe the resident kernel may carry whole into VMEM; a
+# 128-wide fp32 stripe hits this at 8k rows (int8: 32k rows).  Above it,
+# halo_spmm streams the slab through chunked double-buffered DMA.
+RESIDENT_STRIPE_MAX_BYTES = 4 * 1024 * 1024
 
 
 def _pad_dim(x: jax.Array, axis: int, multiple: int,
@@ -49,24 +63,46 @@ def spmm(nbr: jax.Array, wts: jax.Array, table: jax.Array,
     return out[:rows, :feat]
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "resident_max_bytes"))
 def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
-              scale: jax.Array = None, backend: str = "auto") -> jax.Array:
+              scale: jax.Array = None, backend: str = "auto",
+              resident_max_bytes: int = None) -> jax.Array:
     """Fused halo pull+aggregate against the compact HaloExchange slab.
 
     out[i] = Σ_k wts[i,k] · dequant(data[nbr[i,k]]) with optional per-row
     int8 scales — the out-of-subgraph side of Eq. 5 read directly from
     storage precision (no materialized per-subgraph halo table).
+
+    ``resident_max_bytes`` overrides the module-level auto-stream
+    threshold; it is a static (jit-cache-keyed) argument, so an explicit
+    override never aliases executables traced with the default.
     """
     if backend == "auto":
         backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
     if backend == "jnp":
         return halo_spmm_ref(nbr, wts, data, scale)
 
-    interpret = backend != "pallas"
+    interpret = backend not in ("pallas", "pallas_stream")
+    stream = backend.startswith("pallas_stream")
+    if not stream:
+        # Auto-select: stream once the per-feature-block slab stripe
+        # (data + scale column) outgrows the VMEM-resident budget.
+        if resident_max_bytes is None:
+            resident_max_bytes = RESIDENT_STRIPE_MAX_BYTES
+        stripe = data.shape[0] * (min(BLOCK_F, data.shape[1])
+                                  * data.dtype.itemsize
+                                  + (4 if scale is not None else 0))
+        stream = stripe > resident_max_bytes
     rows, feat = nbr.shape[0], data.shape[1]
     nbr_p = _pad_dim(nbr, 0, 128, value=data.shape[0] - 1)
     wts_p = _pad_dim(wts, 0, 128, value=0)
     dat_p = _pad_dim(data, 1, 128, value=0)
-    out = halo_spmm_pallas(nbr_p, wts_p, dat_p, scale, interpret=interpret)
+    if stream:
+        out = halo_spmm_stream_pallas(nbr_p, wts_p, dat_p, scale,
+                                      chunk_rows=STREAM_CHUNK_ROWS,
+                                      interpret=interpret)
+    else:
+        out = halo_spmm_pallas(nbr_p, wts_p, dat_p, scale,
+                               interpret=interpret)
     return out[:rows, :feat]

@@ -40,23 +40,31 @@ def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
     sds = jax.ShapeDtypeStruct
     # Node tables carry the sentinel row; pad row count to shard evenly.
     rows = ((num_nodes + 1 + num_parts - 1) // num_parts) * num_parts
-    # Compact-store slots (+ sentinel), padded to shard evenly slot-wise.
-    slots = ((int(num_nodes * boundary_frac) + 1 + num_parts - 1)
-             // num_parts) * num_parts
+    # Owner-sharded compact store: shard_rows rows per owner (incl. the
+    # per-owner sentinel), R = num_parts · shard_rows total.
+    shard_rows = ((int(num_nodes * boundary_frac) // num_parts + 1 + 7)
+                  // 8) * 8
+    slots = num_parts * shard_rows
+    # Ragged pull-plan width: halo spread uniformly over owners.
+    K = max((H + num_parts - 1) // num_parts, 1)
     data = {
         "x_global": sds((rows, feat), f32),
         "struct": {"in_nbr": sds((num_parts, S, deg_in), i32),
                    "in_wts": sds((num_parts, S, deg_in), f32),
                    "out_nbr": sds((num_parts, S, deg_out), i32),
-                   "out_wts": sds((num_parts, S, deg_out), f32),
-                   "out_nbr_s": sds((num_parts, S, deg_out), i32),
-                   "out_nbr_g": sds((num_parts, S, deg_out), i32)},
+                   "out_wts": sds((num_parts, S, deg_out), f32)},
         "local_ids": sds((num_parts, S), i32),
         "local_valid": sds((num_parts, S), jnp.bool_),
         "halo_ids": sds((num_parts, H), i32),
+        "halo_valid": sds((num_parts, H), jnp.bool_),
+        "halo_ids_x": sds((num_parts, H + 1), i32),
         "local_slots": sds((num_parts, S), i32),
+        "local_boundary": sds((num_parts, S), jnp.bool_),
         "halo_slots": sds((num_parts, H), i32),
         "store_ids": sds((slots,), i32),
+        "sentinel_slots": sds((num_parts,), i32),
+        "pull_send": sds((num_parts, num_parts, K), i32),
+        "pull_recv": sds((num_parts, num_parts, K), i32),
         "labels": sds((num_parts, S), i32),
         "train_mask": sds((num_parts, S), jnp.bool_),
         "val_mask": sds((num_parts, S), jnp.bool_),
@@ -65,9 +73,7 @@ def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
         "full_struct": {"in_nbr": sds((1, 8, 1), i32),
                         "in_wts": sds((1, 8, 1), f32),
                         "out_nbr": sds((1, 8, 1), i32),
-                        "out_wts": sds((1, 8, 1), f32),
-                        "out_nbr_s": sds((1, 8, 1), i32),
-                        "out_nbr_g": sds((1, 8, 1), i32)},
+                        "out_wts": sds((1, 8, 1), f32)},
         "full_ids": sds((1, 8), i32),
         "full_valid": sds((1, 8), jnp.bool_),
         "full_labels": sds((1, 8), i32),
@@ -113,22 +119,30 @@ def main():
 
     specs = gnn_specs(cfg)
     params_abs = abstract_params(specs)
-    # Compact HaloExchange store/cache: (L-1, |boundary|+1 padded, hidden)
-    # in storage precision (int8 adds the per-row scale column).
+    # Owner-sharded HaloExchange store (L-1, M·shard_rows, hidden) in
+    # storage precision (int8 adds the per-row scale column): each device
+    # keeps only the shard it pushes.  The pulled cache is the device-
+    # local per-subgraph halo slab (M, L-1, H+1, hidden).
+    l1 = cfg.num_layers - 1
+    H = data["halo_ids"].shape[1]
     store_abs = {"data": jax.ShapeDtypeStruct(
-        (cfg.num_layers - 1, slots, args.hidden), precision.dtype)}
+        (l1, slots, args.hidden), precision.dtype)}
     store_sh = {"data": NamedSharding(mesh, P(None, mdim, None))}
-    cache_sh = {"data": rep}
+    cache_abs = {"data": jax.ShapeDtypeStruct(
+        (num_parts, l1, H + 1, args.hidden), precision.dtype)}
+    cache_sh = {"data": NamedSharding(mesh, P(mdim, None, None, None))}
     if precision.has_scale:
         store_abs["scale"] = jax.ShapeDtypeStruct(
-            (cfg.num_layers - 1, slots, 1), jnp.float32)
+            (l1, slots, 1), jnp.float32)
         store_sh["scale"] = NamedSharding(mesh, P(None, mdim, None))
-        cache_sh["scale"] = rep
+        cache_abs["scale"] = jax.ShapeDtypeStruct(
+            (num_parts, l1, H + 1, 1), jnp.float32)
+        cache_sh["scale"] = NamedSharding(mesh, P(mdim, None, None, None))
     state_abs = {
         "params": params_abs,
         "opt_state": jax.eval_shape(opt.init, params_abs),
         "store": store_abs,
-        "cache": store_abs,
+        "cache": cache_abs,
         "epoch": jax.ShapeDtypeStruct((), jnp.int32),
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
@@ -145,6 +159,8 @@ def main():
             data_sh[k] = NamedSharding(mesh, P(mdim, None))
         elif k == "store_ids":
             data_sh[k] = rep
+        elif k in ("pull_send", "pull_recv"):
+            data_sh[k] = NamedSharding(mesh, P(mdim, None, None))
         elif k == "struct":
             data_sh[k] = {kk: m_shard for kk in v}
         elif k.startswith("full_"):
@@ -165,7 +181,7 @@ def main():
         "mesh": "2x16x16" if args.multi_pod else "16x16",
         "nodes": args.nodes, "parts": num_parts, "S": S, "H": H,
         "hidden": args.hidden, "precision": args.precision,
-        "store_slots": slots,
+        "store_slots": slots, "shard_rows": slots // num_parts,
         "hlo_flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll["total"],

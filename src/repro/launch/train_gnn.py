@@ -17,8 +17,8 @@ import time
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import HaloPrecision, TrainSettings, evaluate, init_state, \
-    make_epoch_fn, prepare_graph_data
+from repro.core import HaloPrecision, HaloSpec, TrainSettings, evaluate, \
+    init_state, make_epoch_fn, prepare_graph_data
 from repro.graph import make_dataset
 from repro.launch.mesh import make_host_mesh
 from repro.models.gnn import GNNConfig
@@ -27,14 +27,16 @@ from repro.optim import adam
 
 def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
     """Shard every stacked (M, ...) array over 'data'.  The compact
-    HaloExchange store is sharded slot-wise (each device owns the boundary
-    rows it pushes; pulls pay the wire, matching §3.3), while the pulled
-    snapshot slab is replicated — every subgraph gathers arbitrary slots
-    from it on non-pull epochs.  Params/opt replicated (GNN weights are
-    tiny)."""
+    HaloExchange store is owner-sharded slot-wise (the partitioner groups
+    slots by owning part, so each device holds exactly the boundary rows
+    it pushes) and the pulled halo slabs (``state["cache"]``) are
+    device-local, sharded over their leading subgraph axis — nothing about
+    the stale state is replicated; pull epochs pay the §3.3 wire cost
+    once.  Params/opt replicated (GNN weights are tiny)."""
     rep = NamedSharding(mesh, P())
     m_shard = NamedSharding(mesh, P("data"))
     slot_shard = NamedSharding(mesh, P(None, "data", None))
+    slab_shard = NamedSharding(mesh, P("data", None, None, None))
 
     data_sh = {}
     for k, v in data.items():
@@ -42,6 +44,9 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
             continue
         if k in ("x_global", "store_ids") or k.startswith("full_"):
             data_sh[k] = jax.tree.map(lambda _: rep, v)
+        elif k in ("pull_send", "pull_recv"):
+            # PullPlan routing: leading axis is the owner/requester part.
+            data_sh[k] = NamedSharding(mesh, P("data", None, None))
         elif k == "struct":
             data_sh[k] = {kk: m_shard for kk in v}
         else:
@@ -50,9 +55,11 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
         "params": jax.tree.map(lambda _: rep, state["params"]),
         "opt_state": jax.tree.map(lambda _: rep, state["opt_state"]),
         "store": jax.tree.map(lambda _: slot_shard, state["store"]),
-        "cache": jax.tree.map(lambda _: rep, state["cache"]),
+        "cache": jax.tree.map(lambda _: slab_shard, state["cache"]),
         "epoch": rep, "step": rep,
     }
+    if "push_residual" in state:
+        state_sh["push_residual"] = slab_shard
     return data_sh, state_sh
 
 
@@ -67,6 +74,14 @@ def main():
     ap.add_argument("--precision", default="fp32",
                     choices=("fp32", "bf16", "int8"),
                     help="HaloExchange wire/storage precision")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="accumulate int8/bf16 rounding residual at the "
+                         "pusher (unbiased repeated pushes)")
+    ap.add_argument("--pull", default="gather",
+                    choices=("gather", "collective"),
+                    help="PULL transport: dense gather (XLA all-gather "
+                         "fallback) or explicit ragged shard_map "
+                         "all_to_all (needs --data-axis == --parts)")
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size (1 on CPU)")
     args = ap.parse_args()
@@ -77,22 +92,32 @@ def main():
                     in_dim=g.features.shape[1], hidden_dim=64,
                     num_classes=int(g.labels.max()) + 1)
     opt = adam(5e-3)
-    settings = TrainSettings(sync_interval=args.interval, mode="digest",
-                             precision=HaloPrecision(args.precision))
+    settings = TrainSettings(
+        sync_interval=args.interval, mode="digest", pull_mode=args.pull,
+        precision=HaloPrecision(args.precision,
+                                error_feedback=args.error_feedback))
     mesh = make_host_mesh(data=args.data_axis, model=1)
 
     state = init_state(cfg, opt, data, precision=settings.precision)
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
     data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
-    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings),
+    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh),
                        in_shardings=(state_sh, data_sh))
+    sp = data["_sp"]
+    spec = HaloSpec.from_partitions(sp, cfg.hidden_dim, cfg.num_layers,
+                                    settings.precision)
     t0 = time.perf_counter()
     for e in range(args.epochs):
         state, m = epoch_fn(state, tdata)
     ev = evaluate(cfg, state["params"], tdata)
+    sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
     print(f"mesh={dict(mesh.shape)} epochs={args.epochs} "
           f"loss={float(m['loss']):.4f} val_f1={float(ev['val_f1']):.4f} "
           f"({(time.perf_counter()-t0)/args.epochs:.3f}s/epoch)")
+    print(f"store: {spec.store_nbytes()/1e6:.2f} MB total, "
+          f"{spec.shard_nbytes()/1e6:.2f} MB/device; pull/sync: "
+          f"sharded {sync['pull_bytes']/1e6:.2f} MB vs replicated "
+          f"{spec.replicated_pull_nbytes()/1e6:.2f} MB")
 
 
 if __name__ == "__main__":

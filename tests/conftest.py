@@ -1,9 +1,15 @@
 import os
 
-# Tests must see exactly ONE device (the dry-run sets 512 in its own
-# process); keep any inherited XLA_FLAGS out.
+# Tests see exactly ONE device by default (the dry-run sets 512 in its
+# own process); keep any inherited XLA_FLAGS out.  The CI collective job
+# opts into N forced host devices via REPRO_HOST_DEVICES so the sharded
+# pull/push paths run in-process (see test_sharded_pull.py).
 os.environ.pop("XLA_FLAGS", None)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_n_dev = os.environ.get("REPRO_HOST_DEVICES")
+if _n_dev:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={_n_dev}"
 
 import functools
 import inspect

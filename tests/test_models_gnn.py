@@ -67,10 +67,13 @@ def test_zero_slab_ref_equals_zero_tables(model):
     want, _ = gnn_forward(cfg, params, x_local, legacy_tables, struct)
 
     n1 = data["x_global"].shape[0]
+    sp = data["_sp"]
     refs = [halo_ref(jnp.zeros((n1, cfg.in_dim)), None,
-                     struct["out_nbr_g"], struct["out_wts"])] + \
+                     jnp.asarray(sp.out_nbr_global[m]),
+                     struct["out_wts"])] + \
         [halo_ref(jnp.zeros((B + 1, cfg.hidden_dim)), None,
-                  struct["out_nbr_s"], struct["out_wts"])] * \
+                  jnp.asarray(sp.out_nbr_store[m]),
+                  struct["out_wts"])] * \
         (cfg.num_layers - 1)
     got, _ = gnn_forward(cfg, params, x_local, refs, struct)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),

@@ -70,6 +70,31 @@ def test_error_bound_holds(setup):
     res = measure_error_and_bound(cfg, st["params"], data, st["store"])
     assert res["err_measured"] <= res["bound"]
     assert np.isfinite(res["err_measured"])
+    # fp32 storage: no quantization term, corrected bound degenerates
+    assert res["eps_quant"] == [0.0] * (cfg.num_layers - 1)
+    assert res["bound_with_quant"] == res["bound"]
+
+
+def test_error_bound_quantization_term(setup):
+    """int8 storage surfaces the explicit scale/2·√d term: ε_quant > 0,
+    the corrected bound dominates the plain one, and the measured error
+    still sits under it."""
+    from repro.core.halo_exchange import HaloPrecision
+
+    _, data, cfg = setup
+    st, _ = digest_train(cfg, adam(5e-3), data,
+                         TrainSettings(sync_interval=10,
+                                       precision=HaloPrecision("int8")),
+                         epochs=25, eval_every=25)
+    res = measure_error_and_bound(cfg, st["params"], data, st["store"])
+    assert res["storage"] == "int8"
+    assert all(e > 0 for e in res["eps_quant"])
+    assert res["bound_with_quant"] > res["bound"]
+    assert res["err_measured"] <= res["bound_with_quant"]
+    # the int8 term really is scale/2·√d of the served rows
+    d = cfg.hidden_dim
+    max_scale = 2 * max(res["eps_quant"]) / np.sqrt(d)
+    assert max_scale <= float(np.asarray(st["store"]["scale"]).max())
 
 
 def test_async_straggler_advantage(setup):
