@@ -9,11 +9,14 @@ precision/layout config alongside (see ``read_manifest``).
 
 The owner-sharded store needs no special casing on save — ``np.asarray``
 on a sharded jax array gathers the full (L-1, M·shard_rows, hidden) slab
-to host, and the slot layout is positional, so a checkpoint written from
-an M-device run restores bit-identically on any device count.  Pass
-``sharding=`` (a pytree of shardings, or one sharding for all leaves) to
-``restore_checkpoint`` to place restored leaves straight onto the mesh
-instead of round-tripping through a replicated host buffer.
+to host, and the slot layout is positional *in part order, not device
+order*, so a checkpoint written from an M-part run restores
+bit-identically on any device count — including a different
+parts-per-device blocking (M parts on M devices vs M parts on M/k
+devices resolve to the same host slab).  Pass ``sharding=`` (a pytree of
+shardings, or one sharding for all leaves) to ``restore_checkpoint`` to
+place restored leaves straight onto the mesh instead of round-tripping
+through a replicated host buffer.
 """
 from __future__ import annotations
 

@@ -79,19 +79,22 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     def apply_update(params, opt_state, grads, step):
         return opt.update(grads, opt_state, params, step)
 
-    @jax.jit
-    def push_rows(store, slots, valid, reps, sentinel):
-        # Owner-sharded store: this worker's rows (and its padding) all
-        # scatter into its own shard, sentinel included.
-        return halo_exchange.push(store, slots[None], valid[None],
-                                  reps[None], sentinel.reshape(1))
+    # Owner-sharded store: each worker's push is a dynamic-update-slice
+    # of exactly its own shard (owner_push) — the write region is bounded
+    # by construction instead of relying on the partitioner to keep a
+    # whole-slab scatter shard-local.
+    shard_rows = (int(data["store_ids"].shape[0])
+                  // int(data["local_ids"].shape[0]))
 
     @jax.jit
-    def push_rows_ef(store, slots, valid, reps, residual, sentinel):
-        new_store, new_res = halo_exchange.push_ef(
-            store, slots[None], valid[None], reps[None], residual[None],
-            sentinel.reshape(1))
-        return new_store, new_res[0]
+    def push_rows(store, owner, slots, valid, reps):
+        return halo_exchange.owner_push(store, owner, slots, valid, reps,
+                                        shard_rows)
+
+    @jax.jit
+    def push_rows_ef(store, owner, slots, valid, reps, residual):
+        return halo_exchange.owner_push_ef(store, owner, slots, valid,
+                                           reps, residual, shard_rows)
 
     # Per-worker rounding residuals (error-feedback pushes): each worker
     # compensates its own repeated pushes, the motivating async scenario.
@@ -148,14 +151,14 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
         # Periodic PUSH of fresh representations (boundary rows only).
         if (r - 1) % settings.sync_interval == 0 and cfg.num_layers > 1:
+            owner = jnp.asarray(m, jnp.int32)
             if settings.precision.error_feedback:
                 store, push_residual[m] = push_rows_ef(
-                    store, data["local_slots"][m], data["local_valid"][m],
-                    push, push_residual[m], data["sentinel_slots"][m])
+                    store, owner, data["local_slots"][m],
+                    data["local_valid"][m], push, push_residual[m])
             else:
-                store = push_rows(store, data["local_slots"][m],
-                                  data["local_valid"][m], push,
-                                  data["sentinel_slots"][m])
+                store = push_rows(store, owner, data["local_slots"][m],
+                                  data["local_valid"][m], push)
 
         # Fetch fresh params, schedule next round.
         params_snapshots[m] = params

@@ -17,10 +17,20 @@ Stale state lives in the compact **owner-sharded** HaloExchange store
 precision — see repro.core.halo_exchange).  A PULL epoch gathers each
 subgraph's halo rows into a device-local slab ``(M, L-1, H+1, hidden)``
 — via the XLA-partitioned dense gather (all-gather fallback) or the
-explicit ragged ``collective_pull`` when a mesh with one part per device
-is supplied — and non-pull epochs read that local slice *directly*
-through the fused pull+aggregate kernel: nothing is replicated and no
-fp32 halo cache is ever materialized.
+explicit ragged ``collective_pull`` when a mesh is supplied (any M that
+is a multiple of the mesh "data" axis: each device then carries
+k = M/devices subgraphs and owner shards) — and non-pull epochs read
+that local slice *directly* through the fused pull+aggregate kernel:
+nothing is replicated and no fp32 halo cache is ever materialized.
+
+Under ``pull_mode="collective"`` the epoch is fully SPMD end to end:
+PULL is the ragged ``all_to_all``, PUSH goes through the shard-local
+``shard_push`` (owner-local offsets — structurally incapable of
+cross-device writes), and the Theorem-1 staleness probe reads each
+device's own shards (``shard_staleness_error``).  The compiled epoch
+then contains *no* cross-device scatter/gather for the halo state at
+all — a regression-tested invariant (tests/test_hlo_collectives.py),
+not a partitioner heuristic.
 """
 from __future__ import annotations
 
@@ -157,9 +167,11 @@ class TrainSettings:
     # Wire/storage precision of the HaloExchange store (§3.3 byte counts).
     precision: HaloPrecision = HaloPrecision()
     # PULL transport: "gather" = dense gather (XLA inserts the all-gather
-    # under pjit; exact on any device count), "collective" = explicit
-    # shard_map ragged all_to_all of only the referenced slots (needs a
-    # mesh with one subgraph per "data" device — pass it to make_epoch_fn).
+    # under pjit; exact on any device count), "collective" = the fully
+    # SPMD shard_map epoch — ragged all_to_all pulls of only the
+    # referenced slots, shard-local pushes and staleness reads (pass the
+    # mesh to make_epoch_fn; needs num_parts to be a multiple of the
+    # "data" axis: k = parts/devices subgraphs + owner shards per device).
     pull_mode: str = "gather"
     # LLCG-style server correction (for the partition-based baseline): one
     # extra server-side gradient step per round on a sampled node batch
@@ -277,30 +289,57 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
 
         # Periodic PUSH (lines 9–10): epochs r = 1, N+1, 2N+1, ...
         # Owner-sharded scatter: every row of part m lands in shard m.
+        # Collective mode routes it through the explicit shard-local
+        # forms (shard_push / shard_staleness_error) so the compiled
+        # epoch carries ZERO cross-device push traffic — the SPMD
+        # scatter/gather below are the partitioner-dependent fallback
+        # (same math, but XLA cannot prove writes stay in-shard and
+        # materializes collectives around them).
         new_store = state["store"]
         new_residual = state.get("push_residual")
         eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
         if settings.mode == "digest" and cfg.num_layers > 1:
             do_push = ((r - 1) % settings.sync_interval == 0)
-            eps = halo_exchange.staleness_error(
-                state["store"], push_reps, data["local_slots"],
-                data["local_boundary"])
+            num_parts = data["local_slots"].shape[0]
+            shard_rows = state["store"]["data"].shape[1] // num_parts
+            if settings.pull_mode == "collective":
+                eps = halo_exchange.shard_staleness_error(
+                    state["store"], push_reps, data["local_slots"],
+                    data["local_boundary"], shard_rows, mesh)
+
+                def _push():
+                    return halo_exchange.shard_push(
+                        state["store"], data["local_slots"],
+                        data["local_valid"], push_reps, shard_rows, mesh)
+
+                def _push_ef():
+                    return halo_exchange.shard_push_ef(
+                        state["store"], data["local_slots"],
+                        data["local_valid"], push_reps,
+                        state["push_residual"], shard_rows, mesh)
+            else:
+                eps = halo_exchange.staleness_error(
+                    state["store"], push_reps, data["local_slots"],
+                    data["local_boundary"])
+
+                def _push():
+                    return halo_exchange.push(
+                        state["store"], data["local_slots"],
+                        data["local_valid"], push_reps,
+                        data["sentinel_slots"])
+
+                def _push_ef():
+                    return halo_exchange.push_ef(
+                        state["store"], data["local_slots"],
+                        data["local_valid"], push_reps,
+                        state["push_residual"], data["sentinel_slots"])
             if settings.precision.error_feedback:
                 new_store, new_residual = jax.lax.cond(
-                    do_push,
-                    lambda: halo_exchange.push_ef(
-                        state["store"], data["local_slots"],
-                        data["local_valid"], push_reps,
-                        state["push_residual"], data["sentinel_slots"]),
+                    do_push, _push_ef,
                     lambda: (state["store"], state["push_residual"]))
             else:
-                new_store = jax.lax.cond(
-                    do_push,
-                    lambda: halo_exchange.push(
-                        state["store"], data["local_slots"],
-                        data["local_valid"], push_reps,
-                        data["sentinel_slots"]),
-                    lambda: state["store"])
+                new_store = jax.lax.cond(do_push, _push,
+                                         lambda: state["store"])
 
         train_acc = micro_f1(logits, data["labels"],
                              data["train_mask"].astype(jnp.float32))
@@ -362,11 +401,14 @@ def evaluate(cfg: GNNConfig, params: Pytree, data: dict) -> dict:
 def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
                  settings: TrainSettings, epochs: int,
                  eval_every: int = 10, seed: int = 0,
-                 verbose: bool = False) -> tuple[dict, dict]:
-    """Run training; returns (final_state, history dict of lists)."""
+                 verbose: bool = False, mesh=None) -> tuple[dict, dict]:
+    """Run training; returns (final_state, history dict of lists).
+
+    ``mesh`` is required for ``pull_mode="collective"`` (the explicit
+    shard_map pull/push paths); the default gather mode ignores it."""
     state = init_state(cfg, opt, data, seed=seed,
                        precision=settings.precision)
-    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings))
+    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh))
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
     hist: dict[str, list] = {"epoch": [], "loss": [], "train_f1": [],
                              "val_f1": [], "test_f1": [], "time": [],

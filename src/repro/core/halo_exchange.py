@@ -293,17 +293,32 @@ def pull_slab(store: dict, halo_slots: jax.Array) -> dict:
     return out
 
 
+def shards_per_device(num_parts: int, mesh, axis: str = "data",
+                      what: str = "collective halo exchange") -> int:
+    """k = num_parts / mesh[axis] — owner shards resident on each device.
+
+    Mesh-facing form of the single authoritative divisibility check,
+    :func:`repro.graph.partition.parts_per_device` (see there for why a
+    non-multiple M must be rejected loudly).
+    """
+    from repro.graph.partition import parts_per_device
+
+    return parts_per_device(num_parts, int(mesh.shape[axis]), what)
+
+
 def collective_pull(store: dict, send_offsets: jax.Array,
                     recv_positions: jax.Array, halo_size: int,
                     mesh, axis: str = "data") -> dict:
     """Ragged collective PULL: ship only the referenced slots.
 
     The ``shard_map`` form of :func:`pull_slab` for a store sharded
-    slot-wise over ``axis`` with one subgraph per device: every owner
-    gathers from its local shard the rows each requester's halo
-    references (per the :class:`~repro.graph.partition.PullPlan`) and a
-    single ``all_to_all`` routes them.  Per-pair lists are padded to the
-    plan's max width K, so the wire carries ``M·M·K`` rows
+    slot-wise over ``axis``: every device owns ``k = M / mesh[axis]``
+    contiguous owner shards (k = 1 is the classic one-part-per-device
+    case; k > 1 is the M-exceeds-pod-size regime) and gathers from each
+    of them the rows every requester's halo references (per the
+    :class:`~repro.graph.partition.PullPlan`); a single ``all_to_all``
+    routes them.  Per-pair lists are padded to the plan's max width K,
+    so the wire carries ``M·M·K`` rows
     (:meth:`HaloSpec.collective_pull_nbytes`) — ≈ ``Σ_m |halo(G_m)|``
     for balanced partitions, vs the ``(M-1)·(B+1)`` rows of replicating
     the slab.
@@ -313,28 +328,41 @@ def collective_pull(store: dict, send_offsets: jax.Array,
       recv_positions: (M, M, K) PullPlan.recv_positions.
       halo_size: H — per-subgraph halo slots (slab gets H+1 rows).
     Returns the same pytree as :func:`pull_slab`.
+    Raises ValueError when M is not a multiple of the mesh axis.
     """
     from jax.experimental.shard_map import shard_map
 
     num = mesh.shape[axis]
     M, _, K = send_offsets.shape
-    if num != M:
-        raise ValueError(f"collective_pull needs one part per device "
-                         f"(mesh {axis}={num}, parts={M}); use pull_slab")
-    l1, _, hidden = store["data"].shape
+    k = shards_per_device(M, mesh, axis, "collective_pull")
+    l1, rows_total, hidden = store["data"].shape
+    shard_rows = rows_total // M
     has_scale = "scale" in store
 
     def _exchange(table, send, recv, width, pad_value):
-        # table (l1, shard_rows, width) — this owner's shard.
-        rows = table[:, send[0].reshape(-1), :]            # (l1, M*K, w)
-        rows = rows.reshape(l1, M, K, width)
-        buf = jnp.transpose(rows, (1, 2, 0, 3))            # (M, K, l1, w)
+        # table (l1, k·shard_rows, width) — this device's k owner shards,
+        # shard a at rows [a·shard_rows, (a+1)·shard_rows).
+        # send (k, M, K): owner-local offsets for the k local owners;
+        # recv (k, M, K): slab positions for the k local requesters.
+        base = (jnp.arange(k, dtype=send.dtype)
+                * shard_rows)[:, None, None]
+        rows = table[:, (send + base).reshape(-1), :]      # (l1, k·M·K, w)
+        # Flattened order is (owner-local a, requester m = e·k + b, K).
+        rows = rows.reshape(l1, k, num, k, K, width)
+        buf = jnp.transpose(rows, (2, 3, 1, 4, 0, 5))      # (e, b, a, K, l1, w)
         got = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+        # got[d, b, a] = rows owner device d ships from its local shard a
+        # to my local requester b — owner part j = d·k + a, matching the
+        # (M, K) flattened order of recv[b].
+        vals = jnp.transpose(got, (1, 0, 2, 3, 4, 5))
+        vals = vals.reshape(k, M * K, l1, width)
+        vals = jnp.moveaxis(vals, 1, 2)                    # (k, l1, M·K, w)
         slab = jnp.full((l1, halo_size + 1, width), pad_value, table.dtype)
-        vals = jnp.moveaxis(got.reshape(M * K, l1, width), 0, 1)
         # Duplicate positions only occur at the sentinel row H, where
         # every routed value is an owner-sentinel zero row.
-        return slab.at[:, recv[0].reshape(-1), :].set(vals)[None]
+        return jax.vmap(
+            lambda pos, v: slab.at[:, pos, :].set(v))(
+                recv.reshape(k, M * K), vals)              # (k, l1, H+1, w)
 
     shard = P(None, axis, None)
     plan = P(axis, None, None)
@@ -388,6 +416,18 @@ def push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
     return new
 
 
+def _ef_residual(compensated: jax.Array, valid_mask: jax.Array,
+                 precision: HaloPrecision) -> jax.Array:
+    """New rounding residual of an error-feedback push: what the wire
+    format lost of the (masked) compensated rows.  Invalid rows are 0 →
+    residual 0.  Shared by every *_push_ef variant so the EF algebra
+    (the telescoping invariant pinned in tests/test_halo_properties.py)
+    lives in exactly one place."""
+    masked = jnp.where(valid_mask, compensated, 0.0)
+    q, scale = quantize_rows(masked, precision)
+    return masked - dequantize_rows(q, scale)
+
+
 def push_ef(store: dict, local_slots: jax.Array, local_valid: jax.Array,
             reps: jax.Array, residual: jax.Array,
             sentinels: Optional[jax.Array] = None) -> tuple[dict, jax.Array]:
@@ -404,42 +444,48 @@ def push_ef(store: dict, local_slots: jax.Array, local_valid: jax.Array,
     new_store = push(store, local_slots, local_valid, compensated,
                      sentinels)
     # Same masked tensor push() quantizes internally, so XLA CSEs the two
-    # quantize passes under jit; invalid rows are 0 → residual 0.
-    masked = jnp.where(local_valid[:, None, :, None], compensated, 0.0)
-    q, scale = quantize_rows(masked, precision_of(store))
-    return new_store, masked - dequantize_rows(q, scale)
+    # quantize passes under jit.
+    return new_store, _ef_residual(compensated,
+                                   local_valid[:, None, :, None],
+                                   precision_of(store))
 
 
 def shard_push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
                reps: jax.Array, shard_rows: int, mesh,
                axis: str = "data") -> dict:
-    """Explicit shard-local PUSH under ``shard_map``: device m scatters its
-    rows with owner-local offsets into its own shard — structurally
-    incapable of writing another device's slots.  Requires one part per
-    device; :func:`push` is the SPMD fallback (same math, the partitioner
-    already routes every row into the owner shard)."""
+    """Explicit shard-local PUSH under ``shard_map``: each device scatters
+    the rows of its ``k = M / mesh[axis]`` resident parts with owner-local
+    offsets into its own k shards — structurally incapable of writing
+    another device's slots.  :func:`push` is the SPMD fallback (same
+    math, the partitioner already routes every row into the owner shard,
+    but XLA cannot *prove* it and may materialize cross-device traffic).
+    Raises ValueError when M is not a multiple of the mesh axis."""
     from jax.experimental.shard_map import shard_map
 
-    num = mesh.shape[axis]
     M = local_slots.shape[0]
-    if num != M:
-        raise ValueError(f"shard_push needs one part per device "
-                         f"(mesh {axis}={num}, parts={M}); use push")
+    k = shards_per_device(M, mesh, axis, "shard_push")
     prec = precision_of(store)
     has_scale = "scale" in store
 
     def _scatter(data, scale, slots, valid, reps_blk):
-        # data (l1, shard_rows, hid) — this device's shard; reps_blk
-        # (1, l1, S, hid); every slot of part j lies inside shard j.
-        j = jax.lax.axis_index(axis)
-        off = jnp.where(valid[0], slots[0] - j * shard_rows,
-                        shard_rows - 1)
-        vals = jnp.where(valid[0][None, :, None], reps_blk[0], 0.0)
+        # data (l1, k·shard_rows, hid) — this device's k shards; slots /
+        # valid (k, S); reps_blk (k, l1, S, hid).  Local part a (global
+        # part j = d·k + a) owns rows [a·shard_rows, (a+1)·shard_rows);
+        # its slots all lie inside shard j by construction.
+        d = jax.lax.axis_index(axis)
+        sent_local = (jnp.arange(k, dtype=jnp.int32) + 1) * shard_rows - 1
+        off = jnp.where(valid, slots - d * (k * shard_rows),
+                        sent_local[:, None])               # (k, S)
+        vals = jnp.where(valid[:, None, :, None], reps_blk, 0.0)
         q, sc = quantize_rows(vals, prec)
-        new = {"data": data.at[:, off, :].set(q).at[:, -1, :].set(0)}
+        l1 = data.shape[0]
+        qs = jnp.moveaxis(q, 1, 0).reshape(l1, -1, q.shape[-1])
+        new = {"data": data.at[:, off.reshape(-1), :].set(qs)
+               .at[:, sent_local, :].set(0)}
         if sc is not None:
-            new["scale"] = (scale.at[:, off, :].set(sc)
-                            .at[:, -1, :].set(1.0))
+            scs = jnp.moveaxis(sc, 1, 0).reshape(l1, -1, 1)
+            new["scale"] = (scale.at[:, off.reshape(-1), :].set(scs)
+                            .at[:, sent_local, :].set(1.0))
         return new
 
     shard = P(None, axis, None)
@@ -460,6 +506,131 @@ def shard_push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
                    in_specs=(shard, m_spec, m_spec, reps_spec),
                    out_specs={"data": shard})
     return fn(store["data"], local_slots, local_valid, reps)
+
+
+def shard_push_ef(store: dict, local_slots: jax.Array,
+                  local_valid: jax.Array, reps: jax.Array,
+                  residual: jax.Array, shard_rows: int, mesh,
+                  axis: str = "data") -> tuple[dict, jax.Array]:
+    """Error-feedback form of :func:`shard_push` (see :func:`push_ef`).
+
+    The scatter goes through the shard-local path; the residual update is
+    elementwise over the (M, ...)-sharded ``reps``/``residual`` and needs
+    no communication at all.  (The quantize here cannot be CSE'd against
+    the one inside the shard_map body, so push epochs pay it twice —
+    push epochs are 1-in-N and the pass is elementwise, cheap next to
+    the epoch's matmuls.)"""
+    compensated = reps + residual
+    new_store = shard_push(store, local_slots, local_valid, compensated,
+                           shard_rows, mesh, axis)
+    return new_store, _ef_residual(compensated,
+                                   local_valid[:, None, :, None],
+                                   precision_of(store))
+
+
+def owner_push(store: dict, owner: jax.Array, local_slots: jax.Array,
+               local_valid: jax.Array, reps: jax.Array,
+               shard_rows: int) -> dict:
+    """Single-part PUSH that only ever touches the owner's shard.
+
+    The DIGEST-A worker form of :func:`shard_push`: slice shard ``owner``
+    out of the slab, scatter with owner-local offsets, write the shard
+    back — a ``dynamic_update_slice`` of exactly ``shard_rows`` rows, so
+    the write region is provably inside the owner's shard (no whole-slab
+    scatter for the partitioner to reason about).
+
+    local_slots: (S,) global store slots of this worker's local rows
+      (its own sentinel at non-boundary rows); local_valid: (S,) bool;
+    reps: (L-1, S, hidden) fp32.
+    """
+    data = store["data"]
+    l1, _, hidden = data.shape
+    start = jnp.asarray(owner, jnp.int32) * shard_rows
+    off = jnp.where(local_valid, local_slots - start, shard_rows - 1)
+    vals = jnp.where(local_valid[None, :, None], reps, 0.0)
+    q, sc = quantize_rows(vals, precision_of(store))
+    shard = jax.lax.dynamic_slice(data, (0, start, 0),
+                                  (l1, shard_rows, hidden))
+    shard = shard.at[:, off, :].set(q).at[:, -1, :].set(0)
+    new = {"data": jax.lax.dynamic_update_slice(data, shard,
+                                                (0, start, 0))}
+    if sc is not None:
+        sshard = jax.lax.dynamic_slice(store["scale"], (0, start, 0),
+                                       (l1, shard_rows, 1))
+        sshard = sshard.at[:, off, :].set(sc).at[:, -1, :].set(1.0)
+        new["scale"] = jax.lax.dynamic_update_slice(
+            store["scale"], sshard, (0, start, 0))
+    return new
+
+
+def owner_push_ef(store: dict, owner: jax.Array, local_slots: jax.Array,
+                  local_valid: jax.Array, reps: jax.Array,
+                  residual: jax.Array, shard_rows: int
+                  ) -> tuple[dict, jax.Array]:
+    """Error-feedback form of :func:`owner_push` (see :func:`push_ef`)."""
+    compensated = reps + residual
+    new_store = owner_push(store, owner, local_slots, local_valid,
+                           compensated, shard_rows)
+    return new_store, _ef_residual(compensated,
+                                   local_valid[None, :, None],
+                                   precision_of(store))
+
+
+def shard_staleness_error(store: dict, fresh: jax.Array,
+                          local_slots: jax.Array, served: jax.Array,
+                          shard_rows: int, mesh, axis: str = "data"
+                          ) -> jax.Array:
+    """:func:`staleness_error` with owner-local reads under ``shard_map``.
+
+    The SPMD form gathers ``store[:, local_slots, :]`` with the slot axis
+    sharded — every part only ever reads its *own* shard, but XLA cannot
+    prove it and materializes an all-gather of the whole slab each epoch.
+    Here each device reads the rows of its k resident parts straight out
+    of its local shards; only the final (L-1,)-sized max crosses devices.
+    Same numbers as :func:`staleness_error` (max is order-free; the
+    gathers do no arithmetic).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    M, S = local_slots.shape
+    k = shards_per_device(M, mesh, axis, "shard_staleness_error")
+    has_scale = "scale" in store
+    l1 = store["data"].shape[0]
+
+    def _body(data, scale, fresh_blk, slots, served_blk):
+        # data (l1, k·shard_rows, h); fresh_blk (k, l1, S, h); slots /
+        # served_blk (k, S).  Every slot of a resident part lies inside
+        # this device's block (non-boundary rows hit the owner sentinel).
+        d = jax.lax.axis_index(axis)
+        off = (slots - d * (k * shard_rows)).reshape(-1)
+        stale = data[:, off, :].astype(jnp.float32)        # (l1, k·S, h)
+        if scale is not None:
+            stale = stale * scale[:, off, :]
+        stale = jnp.moveaxis(stale.reshape(l1, k, S, -1), 1, 0)
+        diff = jnp.linalg.norm(fresh_blk - stale, axis=-1)  # (k, l1, S)
+        diff = jnp.where(served_blk[:, None, :], diff, 0.0)
+        return jnp.max(diff, axis=(0, 2))[None]            # (1, l1)
+
+    shard = P(None, axis, None)
+    m_spec = P(axis, None)
+    reps_spec = P(axis, None, None, None)
+    out_spec = P(axis, None)
+
+    if has_scale:
+        fn = shard_map(_body, mesh=mesh,
+                       in_specs=(shard, shard, reps_spec, m_spec, m_spec),
+                       out_specs=out_spec)
+        per_dev = fn(store["data"], store["scale"], fresh, local_slots,
+                     served)
+    else:
+        def _nb(data, fresh_blk, slots, served_blk):
+            return _body(data, None, fresh_blk, slots, served_blk)
+        fn = shard_map(_nb, mesh=mesh,
+                       in_specs=(shard, reps_spec, m_spec, m_spec),
+                       out_specs=out_spec)
+        per_dev = fn(store["data"], fresh, local_slots, served)
+    # (num_devices, L-1) sharded partial maxima → tiny all-reduce.
+    return jnp.max(per_dev, axis=0)
 
 
 def staleness_error(store: dict, fresh: jax.Array, local_slots: jax.Array,

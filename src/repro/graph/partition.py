@@ -84,6 +84,33 @@ PARTITIONERS = {"greedy": greedy_partition, "random": random_partition,
                 "metis": greedy_partition}
 
 
+def parts_per_device(num_parts: int, num_devices: int,
+                     what: str = "collective halo exchange") -> int:
+    """k = num_parts / num_devices — owner shards (and subgraphs) on each
+    mesh data-axis device under the collective halo paths.
+
+    The collective pull/push block the owner-sharded slot space (and the
+    PullPlan) into k contiguous shards per device, so any M that is a
+    *multiple* of the device count works (M > pod size = parts-per-device
+    > 1).  A non-multiple M would silently corrupt the owner-local slot
+    math (a device could not tell where its shards start), so it is
+    rejected loudly instead — this is the single authoritative check;
+    ``halo_exchange.shards_per_device`` and
+    ``StackedPartitions.shards_per_device`` both delegate here.
+    """
+    if num_devices <= 0 or num_parts % num_devices != 0:
+        raise ValueError(
+            f"{what}: num_parts={num_parts} must be a whole multiple of "
+            f"the mesh data axis ({num_devices} devices) — each device "
+            f"owns k = num_parts/{num_devices} contiguous shards, but "
+            f"{num_parts} % {max(num_devices, 1)} = "
+            f"{num_parts % num_devices if num_devices > 0 else num_parts}"
+            f".  Use a part count divisible by the device count, or the "
+            f"dense-gather fallback (pull_slab / push / "
+            f"pull_mode='gather'), which is correct on any device count.")
+    return num_parts // num_devices
+
+
 def partition_report(g: Graph, sp: "StackedPartitions") -> dict:
     """Partition quality by what the compact store actually pays for.
 
@@ -121,6 +148,13 @@ class PullPlan:
       recv_positions[m, j, k] halo-slab position (< H+1) where requester m
                               lands that row; padding points at slab row H
                               (the slab's zero sentinel).
+
+    Both tables are **device-blockable**: offsets are owner-local and
+    positions requester-local, so sharding the leading axis over a mesh
+    data axis of D devices hands each device the k = M/D contiguous
+    (owner-block, requester-block) slices it needs — this is what lets
+    ``collective_pull``/``shard_push`` run with parts-per-device > 1
+    (M exceeding the pod size) without rebuilding the plan.
     """
 
     max_rows: int                 # K — padded per-pair row count
@@ -205,6 +239,13 @@ class StackedPartitions:
     def pull_rows(self) -> int:
         """Σ_m |halo(G_m)| — rows shipped per PULL sync (§3.3)."""
         return int(self.halo_valid.sum())
+
+    def shards_per_device(self, num_devices: int) -> int:
+        """k = M / num_devices under the collective paths; raises the
+        spelled-out ValueError of :func:`parts_per_device` when M is not
+        a multiple (the collective slot math would silently be wrong;
+        the dense-gather fallback is the correct choice there)."""
+        return parts_per_device(self.num_parts, num_devices)
 
     def pull_plan(self) -> PullPlan:
         """Ragged collective-pull routing (see :class:`PullPlan`)."""

@@ -1,8 +1,13 @@
 """GNN dry-run: DIGEST's own workload (Algorithm 1) lowered on the
-production mesh — M=256 subgraphs of a large synthetic graph, one per chip
-on the "data" axis, compact HaloExchange store sharded slot-wise.
+production mesh — M = k·256 subgraphs of a large synthetic graph, k per
+chip on the "data" axis (``--parts-per-device``), compact HaloExchange
+store sharded slot-wise.  ``--pull collective`` lowers the fully-SPMD
+shard_map epoch (ragged all_to_all pull, shard-local push) instead of
+the partitioner-dependent gather/scatter fallback.
 
   PYTHONPATH=src python -m repro.launch.dryrun_gnn [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun_gnn --pull collective \\
+      --parts-per-device 2
 
 Run as its own process (512 placeholder devices).
 """
@@ -93,12 +98,24 @@ def main():
     ap.add_argument("--deg", type=int, default=16)
     ap.add_argument("--precision", default="fp32",
                     choices=("fp32", "bf16", "int8"))
+    ap.add_argument("--pull", default="gather",
+                    choices=("gather", "collective"),
+                    help="collective = fully-SPMD shard_map epoch "
+                         "(ragged all_to_all pull + shard-local push); "
+                         "single-pod mesh only (the shard_map runs over "
+                         "the 'data' axis)")
+    ap.add_argument("--parts-per-device", type=int, default=1,
+                    help="k subgraphs/owner shards per 'data' device "
+                         "(M = k x data axis; the M > pod-size regime)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    if args.pull == "collective" and args.multi_pod:
+        raise SystemExit("--pull collective needs the single-pod mesh "
+                         "(shard_map over the 'data' axis)")
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     data_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
-    num_parts = 1
+    num_parts = args.parts_per_device
     for a in data_axes:
         num_parts *= mesh.shape[a]
 
@@ -107,7 +124,7 @@ def main():
     opt = adam(5e-3)
     precision = HaloPrecision(args.precision)
     settings = TrainSettings(sync_interval=10, mode="digest",
-                             precision=precision)
+                             pull_mode=args.pull, precision=precision)
     data, S, H, rows, slots = abstract_gnn_case(
         args.nodes, num_parts, args.feat, args.hidden, 64, args.deg,
         args.deg // 2, halo_frac=1.0)
@@ -168,7 +185,9 @@ def main():
         else:
             data_sh[k] = m_shard
 
-    epoch_fn = make_epoch_fn(cfg, opt, settings)
+    epoch_fn = make_epoch_fn(
+        cfg, opt, settings,
+        mesh=mesh if args.pull == "collective" else None)
     t0 = time.perf_counter()
     lowered = jax.jit(epoch_fn, in_shardings=(state_sh, data_sh)).lower(
         state_abs, data)
@@ -181,6 +200,7 @@ def main():
         "mesh": "2x16x16" if args.multi_pod else "16x16",
         "nodes": args.nodes, "parts": num_parts, "S": S, "H": H,
         "hidden": args.hidden, "precision": args.precision,
+        "pull_mode": args.pull, "parts_per_device": args.parts_per_device,
         "store_slots": slots, "shard_rows": slots // num_parts,
         "hlo_flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),

@@ -80,8 +80,11 @@ def main():
     ap.add_argument("--pull", default="gather",
                     choices=("gather", "collective"),
                     help="PULL transport: dense gather (XLA all-gather "
-                         "fallback) or explicit ragged shard_map "
-                         "all_to_all (needs --data-axis == --parts)")
+                         "fallback; any device count) or the fully-SPMD "
+                         "shard_map path — ragged all_to_all pulls plus "
+                         "shard-local pushes; needs --parts to be a "
+                         "multiple of --data-axis (k = parts/data-axis "
+                         "subgraphs and owner shards per device)")
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size (1 on CPU)")
     args = ap.parse_args()
@@ -97,6 +100,12 @@ def main():
         precision=HaloPrecision(args.precision,
                                 error_feedback=args.error_feedback))
     mesh = make_host_mesh(data=args.data_axis, model=1)
+    if args.pull == "collective":
+        # Fail fast with the M-vs-mesh mismatch spelled out (the epoch
+        # would raise the same error at trace time).
+        ppd = data["_sp"].shards_per_device(args.data_axis)
+        print(f"collective mode: {ppd} subgraph(s)/owner shard(s) "
+              f"per device")
 
     state = init_state(cfg, opt, data, precision=settings.precision)
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}

@@ -1,0 +1,115 @@
+"""Compiled-HLO assertion harness for the DIGEST epoch.
+
+Lowers the *jitted* epoch function on a forced multi-device mesh with the
+production shardings (``repro.launch.train_gnn.subgraph_shardings``) and
+exposes the compiled module's collective-op census, so tests can assert
+communication invariants on the program XLA actually emits instead of
+spot-checking trajectories.
+
+The key fact the assertions lean on: after SPMD partitioning, every HLO
+op is device-local — **all** cross-device data movement is explicit
+collective ops (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).  "The push never crosses devices" is therefore
+exactly the statement "the only collectives in the module are the
+expected ragged all-to-all pulls plus the (L-1)-or-scalar-sized metric /
+gradient all-reduces" — zero all-gathers, zero collective-permutes.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+import jax
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def run_forced_device_subprocess(test_file: str, marker: str,
+                                 devices: int = 8, timeout: int = 900):
+    """Re-launch ``test_file`` as ``__main__`` with a forced N-device CPU
+    platform, so multi-device checks run even on single-device hosts
+    (the in-process pytest variants cover the CI forced-device jobs).
+    Asserts a clean exit and that ``marker`` was printed."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(test_file)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + os.path.join(repo, "tests") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, os.path.abspath(test_file)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\n" \
+                                f"stderr:\n{res.stderr}"
+    assert marker in res.stdout, res.stdout
+
+
+def collective_counts(hlo_text: str) -> dict:
+    """Count each collective op in a compiled HLO module's text.
+
+    Async pairs (``-start``/``-done``) are counted once, at ``-start``.
+    """
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for c in COLLECTIVES:
+            if f"{c}-done(" in s:
+                break
+            if re.search(rf"\s{c}(-start)?\(", s):
+                counts[c] += 1
+                break
+    return counts
+
+
+def expected_all_to_all(storage: str) -> int:
+    """all-to-all count of one collective PULL: one op per store tensor
+    ({data} or {data, scale}), the (L-1)-layer axis batched inside the
+    exchange buffer — so the count is independent of depth."""
+    return 2 if storage == "int8" else 1
+
+
+def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",
+               pull_mode: str = "collective", model: str = "gcn",
+               hidden: int = 32, sync_interval: int = 2,
+               error_feedback: bool = False):
+    """Build (jitted_epoch_fn, state, tdata) for graph ``g``.
+
+    With ``mesh`` the epoch is jitted with the production shardings
+    (store slot-sharded, (M, ...) arrays over "data"); without it the
+    plain single-device program is returned.
+    """
+    from repro.core import (TrainSettings, init_state, make_epoch_fn,
+                            prepare_graph_data)
+    from repro.core.halo_exchange import HaloPrecision
+    from repro.launch.train_gnn import subgraph_shardings
+    from repro.models.gnn import GNNConfig
+    from repro.optim import adam
+
+    data = prepare_graph_data(g, num_parts)
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+    cfg = GNNConfig(model=model, num_layers=3 if model != "gat" else 2,
+                    in_dim=g.features.shape[1], hidden_dim=hidden,
+                    num_classes=int(g.labels.max()) + 1, heads=2)
+    opt = adam(5e-3)
+    settings = TrainSettings(
+        sync_interval=sync_interval, mode="digest", pull_mode=pull_mode,
+        precision=HaloPrecision(storage, error_feedback=error_feedback))
+    state = init_state(cfg, opt, data, precision=settings.precision)
+    if mesh is None:
+        fn = jax.jit(make_epoch_fn(cfg, opt, settings))
+    else:
+        data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
+        fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh),
+                     in_shardings=(state_sh, data_sh))
+    return fn, state, tdata
+
+
+def compile_epoch(g, num_parts: int, mesh, **kw):
+    """Lower + compile the sharded epoch; returns the Compiled object
+    (``.as_text()`` is the partitioned per-device HLO module)."""
+    fn, state, tdata = make_epoch(g, num_parts, mesh, **kw)
+    return fn.lower(state, tdata).compile()

@@ -1,0 +1,143 @@
+"""Property-based (hypothesis) guarantees of the halo wire formats.
+
+Pin the two quantitative claims the HaloExchange docs make:
+
+  * int8 wire: a push→pull round trip perturbs each element by at most
+    scale/2 = max|row|/254 (symmetric per-row quantization, round to
+    nearest); bf16 by at most 2^-8·|x| (half-ulp of an 8-bit mantissa).
+  * error feedback (``push_ef``): after ANY push sequence, the served
+    (dequantized) value plus the carried residual telescopes to the
+    exact fp32 history — per step ``deq_t + e_t = reps_t + e_{t-1}``,
+    cumulatively ``Σ deq_t + e_T = Σ reps_t`` — so repeated pushes of
+    slowly-moving representations stay unbiased at 1-byte wire cost.
+
+Uses the real ``hypothesis`` when installed (CI); otherwise the
+deterministic stand-in from conftest (same given/settings API).
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import halo_exchange as hx
+from repro.core.halo_exchange import HaloPrecision
+
+L1 = 2
+
+
+def _make_store_and_rows(hidden, rows, seed, storage, amp_log2):
+    """A synthetic single-part owner-sharded store: slots [0, rows) owned
+    by part 0, sentinel at row ``rows`` — no graph build needed."""
+    rng = np.random.default_rng(seed)
+    reps = (rng.normal(size=(1, L1, rows, hidden))
+            * 2.0 ** amp_log2).astype(np.float32)
+    store = hx.init_store(L1, rows, hidden, HaloPrecision(storage))
+    slots = jnp.arange(rows, dtype=jnp.int32)[None]
+    valid = jnp.ones((1, rows), bool)
+    sent = jnp.asarray([rows], jnp.int32)
+    return store, reps, slots, valid, sent
+
+
+@settings(max_examples=15, deadline=None)
+@given(hidden=st.integers(1, 48), rows=st.integers(1, 12),
+       seed=st.integers(0, 2 ** 16), amp_log2=st.integers(-8, 8))
+def test_int8_roundtrip_error_bounded_by_half_scale(hidden, rows, seed,
+                                                    amp_log2):
+    store, reps, slots, valid, sent = _make_store_and_rows(
+        hidden, rows, seed, "int8", amp_log2)
+    store = hx.push(store, slots, valid, jnp.asarray(reps), sent)
+    served = np.asarray(hx.pull(store, slots))          # (1, L1, rows, h)
+    scale = np.abs(reps).max(axis=-1, keepdims=True) / 127.0
+    err = np.abs(served - reps)
+    # Half-scale per element, plus fp32 headroom for the divide/multiply.
+    bound = scale / 2 * (1 + 1e-5) + 1e-12
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(hidden=st.integers(1, 48), rows=st.integers(1, 12),
+       seed=st.integers(0, 2 ** 16), amp_log2=st.integers(-8, 8))
+def test_bf16_roundtrip_error_bounded_by_half_ulp(hidden, rows, seed,
+                                                  amp_log2):
+    store, reps, slots, valid, sent = _make_store_and_rows(
+        hidden, rows, seed, "bf16", amp_log2)
+    store = hx.push(store, slots, valid, jnp.asarray(reps), sent)
+    served = np.asarray(hx.pull(store, slots))
+    err = np.abs(served - reps)
+    assert (err <= np.abs(reps) * 2.0 ** -8 + 1e-30).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(hidden=st.integers(1, 32), rows=st.integers(1, 8),
+       steps=st.integers(1, 8), seed=st.integers(0, 2 ** 16),
+       storage=st.sampled_from(["int8", "bf16"]))
+def test_error_feedback_residual_telescopes_exactly(hidden, rows, steps,
+                                                    seed, storage):
+    rng = np.random.default_rng(seed)
+    store = hx.init_store(L1, rows, hidden, HaloPrecision(storage))
+    slots = jnp.arange(rows, dtype=jnp.int32)[None]
+    # A fixed random valid mask: invalid rows must stay 0/0 throughout.
+    valid_np = rng.random((1, rows)) < 0.8
+    valid = jnp.asarray(valid_np)
+    sent = jnp.asarray([rows], jnp.int32)
+    residual = jnp.zeros((1, L1, rows, hidden), jnp.float32)
+
+    sum_true = np.zeros((1, L1, rows, hidden), np.float64)
+    sum_served = np.zeros((1, L1, rows, hidden), np.float64)
+    for _ in range(steps):
+        reps = rng.normal(size=(1, L1, rows, hidden)).astype(np.float32)
+        prev_residual = np.asarray(residual)
+        store, residual = hx.push_ef(store, slots, valid,
+                                     jnp.asarray(reps), residual, sent)
+        served = np.asarray(hx.pull(store, slots))
+        mask = valid_np[:, None, :, None]
+        # Per-step: served + residual == reps + previous residual (the
+        # quantizer's rounding is fully captured by the carried term).
+        np.testing.assert_allclose(
+            np.where(mask, served + np.asarray(residual), 0.0),
+            np.where(mask, reps + prev_residual, 0.0),
+            rtol=1e-6, atol=1e-7)
+        # Invalid rows are never served and carry no residual.
+        assert np.all(np.where(mask, 0.0, served) == 0.0)
+        assert np.all(np.where(mask, 0.0, np.asarray(residual)) == 0.0)
+        sum_true += np.where(mask, reps, 0.0)
+        sum_served += np.where(mask, served, 0.0)
+    # Telescoped: the cumulative served signal plus the final residual is
+    # the exact fp32 update history (float64 accumulation on the host so
+    # the comparison itself adds no noise).
+    np.testing.assert_allclose(
+        sum_served + np.where(valid_np[:, None, :, None],
+                              np.asarray(residual), 0.0),
+        sum_true, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hidden=st.integers(1, 32), rows=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_ef_time_average_converges_at_scale_over_steps(hidden, rows,
+                                                       seed):
+    """The unbiasedness payoff: pushing the SAME row T times with error
+    feedback leaves a time-averaged served value within ~scale/(2T) of
+    the truth (the telescoped residual: avg − true = (e_0 − e_T)/T), an
+    O(T) improvement over the plain push's persistent scale/2 rounding
+    bias."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(1, L1, rows, hidden)).astype(np.float32)
+    slots = jnp.arange(rows, dtype=jnp.int32)[None]
+    valid = jnp.ones((1, rows), bool)
+    sent = jnp.asarray([rows], jnp.int32)
+    steps = 16
+
+    ef = hx.init_store(L1, rows, hidden, HaloPrecision("int8"))
+    residual = jnp.zeros_like(jnp.asarray(base))
+    avg_ef = np.zeros(base.shape, np.float64)
+    for _ in range(steps):
+        ef, residual = hx.push_ef(ef, slots, valid, jnp.asarray(base),
+                                  residual, sent)
+        avg_ef += np.asarray(hx.pull(ef, slots)) / steps
+    err_ef = np.abs(avg_ef - base).max()
+    # The compensated rows' amax (hence the adaptive per-push scale)
+    # stays within ~half a quantization step of the input's amax.
+    scale_bound = (np.abs(base).max() / 127.0) * 1.1 + 1e-9
+    assert err_ef <= scale_bound / 2 / steps * 1.5 + 1e-6, \
+        (err_ef, scale_bound)

@@ -6,16 +6,10 @@ on a single-device host the subprocess test re-launches this file with
 ``--xla_force_host_platform_device_count=8`` so the collective paths are
 exercised everywhere.
 """
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _tree_equal(a: dict, b: dict):
@@ -175,17 +169,8 @@ def test_sharded_collective_multidevice_subprocess():
     pull/push paths are exercised even on single-device hosts."""
     if jax.device_count() >= 8:
         pytest.skip("covered by the in-process variant")
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = (os.path.join(_REPO, "src") + os.pathsep
-                         + env.get("PYTHONPATH", ""))
-    res = subprocess.run([sys.executable, os.path.abspath(__file__)],
-                         env=env, capture_output=True, text=True,
-                         timeout=900)
-    assert res.returncode == 0, f"stdout:\n{res.stdout}\n" \
-                                f"stderr:\n{res.stderr}"
-    assert "MULTI_DEVICE_OK" in res.stdout
+    import hlo_utils
+    hlo_utils.run_forced_device_subprocess(__file__, "MULTI_DEVICE_OK")
 
 
 if __name__ == "__main__":
