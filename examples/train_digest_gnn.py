@@ -62,15 +62,22 @@ def main():
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size for --pull collective "
                          "(1 on a single-device host)")
+    ap.add_argument("--halo-weight", type=float, default=0.0,
+                    help="boundary-aware partitioning score weight "
+                         "(0 = classic edge-cut LDG)")
+    ap.add_argument("--no-gat-dedup", action="store_true",
+                    help="disable the GAT owner-shard projection dedup")
     ap.add_argument("--ckpt-dir", default="/tmp/digest_ckpt")
     args = ap.parse_args()
 
     g = make_dataset(args.dataset, scale=args.scale)
-    data = prepare_graph_data(g, args.parts)
+    data = prepare_graph_data(g, args.parts, halo_weight=args.halo_weight)
     cfg = GNNConfig(model=args.model,
                     num_layers=3 if args.model != "gat" else 2,
                     in_dim=g.features.shape[1], hidden_dim=args.hidden,
-                    num_classes=int(g.labels.max()) + 1, heads=4)
+                    num_classes=int(g.labels.max()) + 1, heads=4,
+                    halo_occupancy=data["_worklist"].occupancy,
+                    gat_halo_dedup=not args.no_gat_dedup)
     pc = param_count(gnn_specs(cfg))
     print(f"dataset={g.name} nodes={g.num_nodes} edges={g.num_edges} "
           f"parts={args.parts} params={pc:,}")

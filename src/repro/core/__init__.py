@@ -1,7 +1,8 @@
 """DIGEST core: the paper's contribution as a composable JAX module."""
 from repro.core.digest import (MODES, TrainSettings, digest_train, evaluate,
-                               full_graph_forward, init_state, make_epoch_fn,
-                               prepare_graph_data)
+                               full_graph_forward, gat_projected, init_state,
+                               make_epoch_fn, prepare_graph_data,
+                               project_store_tables)
 from repro.core.async_engine import (AsyncSettings, digest_a_train,
                                      sync_time_per_round)
 from repro.core.error_bound import measure_error_and_bound, quantization_eps
@@ -13,8 +14,9 @@ from repro.core import stale_store
 
 __all__ = [
     "MODES", "TrainSettings", "digest_train", "evaluate",
-    "full_graph_forward", "init_state", "make_epoch_fn",
-    "prepare_graph_data", "AsyncSettings", "digest_a_train",
+    "full_graph_forward", "gat_projected", "init_state", "make_epoch_fn",
+    "prepare_graph_data", "project_store_tables",
+    "AsyncSettings", "digest_a_train",
     "sync_time_per_round", "measure_error_and_bound", "quantization_eps",
     "CommConstants",
     "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes",

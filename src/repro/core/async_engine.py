@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import halo_exchange
-from repro.core.digest import evaluate, make_subgraph_loss
+from repro.core.digest import (check_worklist_geometry, evaluate,
+                               make_subgraph_loss)
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import init_params
 from repro.optim import Optimizer
@@ -52,6 +53,7 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     history["sim_time"] is the simulated wall clock — the paper's Figure 7
     x-axis — under which async should dominate sync when a straggler exists.
     """
+    check_worklist_geometry(cfg, data)
     rng = np.random.default_rng(settings.seed)
     M = int(data["halo_ids"].shape[0])
     H = int(data["halo_ids"].shape[1])
@@ -69,6 +71,13 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
     @jax.jit
     def worker_grad(params, x_loc, x_h0, m_cache, struct, labels, mask):
+        # Plain (H, d) tables normalize to halo refs inside the layers
+        # (_as_halo_ref), which picks the chunk worklist off the struct
+        # dict — so the async engine's aggregation goes through the same
+        # occupancy-aware kernel selection as the SPMD epoch.  (GAT's
+        # owner-shard projection dedup does NOT apply here: each worker
+        # owns a private fp32 cache, and the simulator's per-worker
+        # gradient kernel keeps the paper's exact async semantics.)
         def f(p):
             tables = [x_h0] + [m_cache[i] for i in range(cfg.num_layers - 1)]
             return loss_fn(p, x_loc, tables, struct, labels, mask)

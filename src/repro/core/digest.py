@@ -47,7 +47,9 @@ from repro.core import halo_exchange
 from repro.core.halo_exchange import HaloPrecision
 from repro.graph.graph import Graph
 from repro.graph.partition import StackedPartitions, build_partitions
-from repro.models.gnn import (GNNConfig, gnn_forward, gnn_specs, halo_ref)
+from repro.kernels.spmm import BLOCK_ROWS, STREAM_CHUNK_ROWS
+from repro.models.gnn import (GNNConfig, gnn_forward, gnn_specs, halo_ref,
+                              projected_halo_ref)
 from repro.nn import init_params, micro_f1, softmax_cross_entropy
 from repro.optim import Optimizer
 
@@ -56,26 +58,57 @@ Pytree = Any
 MODES = ("digest", "partition", "propagation")
 
 
+def gat_projected(cfg: GNNConfig) -> bool:
+    """True when the epoch runs GAT with the owner-shard projection dedup:
+    the pulled cache then holds *projected* rows (z = W·h̃ per hidden
+    layer, flat ``z{ell}``/``z{ell}_scale`` slabs) instead of raw stale
+    representations.  Must agree between :func:`init_state` and
+    :func:`make_epoch_fn` — hence one predicate."""
+    return (cfg.model == "gat" and cfg.gat_halo_dedup
+            and cfg.num_layers > 1)
+
+
 # ---------------------------------------------------------------------------
 # Data preparation
 # ---------------------------------------------------------------------------
 
 def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
-                       seed: int = 0) -> dict:
-    """Build the jnp data dict consumed by the epoch function."""
-    sp = build_partitions(g, num_parts, method=method, seed=seed)
+                       seed: int = 0, halo_weight: float = 0.0,
+                       stream_chunk_rows: int = None) -> dict:
+    """Build the jnp data dict consumed by the epoch function.
+
+    ``halo_weight`` enables the boundary-aware partitioning score (see
+    :func:`repro.graph.partition.greedy_partition`); ``stream_chunk_rows``
+    sets the chunk geometry of the precomputed halo worklists (defaults
+    to the kernel's ``STREAM_CHUNK_ROWS``).
+    """
+    sp = build_partitions(g, num_parts, method=method, seed=seed,
+                          halo_weight=halo_weight)
     full = build_partitions(g, 1, method="random", seed=seed)
     x_global = np.concatenate(
         [g.features, np.zeros((1, g.features.shape[1]), np.float32)], axis=0)
+    chunk_rows = (STREAM_CHUNK_ROWS if stream_chunk_rows is None
+                  else stream_chunk_rows)
 
-    def _struct(s: StackedPartitions) -> dict:
+    def _struct(s: StackedPartitions) -> tuple:
         # The out-ELL in per-subgraph halo-slot space addresses the
         # device-local pulled slabs directly; the store-slot / global-id
         # remaps live on StackedPartitions for whole-slab consumers.
+        # The chunk worklist rides along with the adjacency it was
+        # computed from: the streamed halo_spmm skips every
+        # (row_block, chunk) pair it proves empty (geometry: the kernels'
+        # 128-row blocks over the BLOCK_ROWS-padded S rows, chunk_rows-
+        # row chunks over the (H+1)-row slab).
+        wl = s.chunk_worklist(chunk_rows, BLOCK_ROWS)
         return {"in_nbr": jnp.asarray(s.in_nbr),
                 "in_wts": jnp.asarray(s.in_wts),
                 "out_nbr": jnp.asarray(s.out_nbr),
-                "out_wts": jnp.asarray(s.out_wts)}
+                "out_wts": jnp.asarray(s.out_wts),
+                "wl_ids": jnp.asarray(wl.ids),
+                "wl_cnt": jnp.asarray(wl.cnt)}, wl
+
+    struct, worklist = _struct(sp)
+    full_struct, _ = _struct(full)
 
     plan = sp.pull_plan()
     # halo_ids extended with a sentinel column: gathering x_global (or the
@@ -86,7 +119,7 @@ def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
         axis=1)
     return {
         "x_global": jnp.asarray(x_global),
-        "struct": _struct(sp),
+        "struct": struct,
         "local_ids": jnp.asarray(sp.local_ids),
         "local_valid": jnp.asarray(sp.local_valid),
         "halo_ids": jnp.asarray(sp.halo_ids),
@@ -106,21 +139,78 @@ def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
         "val_mask": jnp.asarray(sp.val_mask),
         "test_mask": jnp.asarray(sp.test_mask),
         # Full-graph (M=1) view for exact eval / propagation mode.
-        "full_struct": _struct(full),
+        "full_struct": full_struct,
         "full_ids": jnp.asarray(full.local_ids),
         "full_valid": jnp.asarray(full.local_valid),
         "full_labels": jnp.asarray(full.labels),
         "full_train_mask": jnp.asarray(full.train_mask),
         "full_val_mask": jnp.asarray(full.val_mask),
         "full_test_mask": jnp.asarray(full.test_mask),
-        # Host-side metadata (not traced).
+        # Host-side metadata (not traced).  _worklist carries the static
+        # occupancy the launchers copy into GNNConfig.halo_occupancy for
+        # the skip-vs-dense stream selection.
         "_sp": sp,
         "_graph": g,
+        "_worklist": worklist,
     }
 
 
 def _subgraph_features(x_global: jax.Array, ids: jax.Array) -> jax.Array:
     return x_global[ids]
+
+
+def check_worklist_geometry(cfg: GNNConfig, data: dict) -> None:
+    """Reject a chunk worklist built at a different ``chunk_rows`` than
+    the epoch's kernels will stream with — a coarser worklist silently
+    drops referenced slab rows (a finer one the kernel catches itself),
+    so the build knob (``prepare_graph_data(stream_chunk_rows=...)``)
+    and the call knob (``GNNConfig.stream_chunk_rows``) must agree.
+    No-op when the host-side ``_worklist`` meta was stripped."""
+    wl = data.get("_worklist")
+    if wl is None:
+        return
+    want = (cfg.stream_chunk_rows if cfg.stream_chunk_rows is not None
+            else STREAM_CHUNK_ROWS)
+    if wl.chunk_rows != want:
+        raise ValueError(
+            f"chunk worklist was built with chunk_rows={wl.chunk_rows} "
+            f"but the epoch streams with chunk_rows={want} — pass the "
+            f"same value to prepare_graph_data(stream_chunk_rows=...) "
+            f"and GNNConfig.stream_chunk_rows (a mismatched worklist "
+            f"would silently skip referenced slab rows)")
+
+
+def project_store_tables(store: dict, params: Pytree, cfg: GNNConfig,
+                         precision: HaloPrecision) -> dict:
+    """GAT owner-shard projection dedup: project the *store*, not the slabs.
+
+    For every hidden layer ℓ, computes ``z{ℓ} = dequant(store[ℓ]) · W_{ℓ+1}``
+    over the R owner-sharded slot rows — ONCE per owner shard per layer —
+    and re-encodes it in the wire precision, returning pull-ready
+    single-layer stores ``{"z{ℓ}": {"data": (1, R, heads·dh)[, "scale"]}}``
+    for :func:`halo_exchange.pull_slab` / ``collective_pull``.  The legacy
+    path instead re-projected every subgraph's pulled ``(H+1, d)`` slab
+    every epoch — ~M× the FLOPs, since each boundary row appears in many
+    subgraphs' halos.  The einsum and the per-row quantization are
+    row-wise over the slot axis, so under pjit with the store sharded
+    slot-wise they stay inside each device's shards (no collectives); the
+    projected rows then ship through the *same* pull routing as raw rows.
+    Shipping ``heads·dh``-wide projected rows also shrinks pull bytes
+    whenever ``heads·head_dim < hidden``.
+    """
+    out = {}
+    for ell in range(cfg.num_layers - 1):
+        w = params[f"layer_{ell + 1}"]["w"]        # (hidden, heads, dh)
+        tab, sc = halo_exchange.layer_table(store, ell)
+        rows = halo_exchange.dequantize_rows(tab, sc)       # (R, hidden)
+        z = jnp.einsum("rd,dhk->rhk", rows, w)
+        z = z.reshape(z.shape[0], -1)                       # (R, heads·dh)
+        q, qs = halo_exchange.quantize_rows(z, precision)
+        zs = {"data": q[None]}
+        if qs is not None:
+            zs["scale"] = qs[None]
+        out[f"z{ell}"] = zs
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +297,18 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
         if settings.mode == "partition":
             x_halo0 = jnp.zeros_like(x_halo0)
 
+        # GAT owner-shard dedup: the cache holds *projected* rows
+        # (z{ell} = W·h̃, projected once per owner shard per layer at
+        # pull time) instead of raw stale reps — see
+        # project_store_tables.  The projection rides the staleness
+        # contract the representations already have: frozen between
+        # syncs at the pull-time W, and under the same stop_gradient as
+        # the stale rows (the legacy path differentiated W through the
+        # halo einsum; here that term is dropped with the rest of the
+        # stale branch — pull epochs still see the identical forward,
+        # and gat_halo_dedup=False restores the legacy semantics).
+        use_projected = gat_projected(cfg)
+
         # The stale slab feeding this epoch's out-of-subgraph products —
         # device-local (M, L-1, H+1, hid) in storage precision: each
         # subgraph's slice holds only the halo rows it references, so
@@ -216,11 +318,28 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
             # gathered down to the per-subgraph halo slabs.
             _, reps = full_graph_forward(cfg, state["params"], data)
             ids = jnp.clip(data["halo_ids_x"], 0, reps[0].shape[0] - 1)
-            slab = jnp.stack([rep[ids] for rep in reps], axis=1)
             hv = jnp.pad(data["halo_valid"], ((0, 0), (0, 1)))
-            slab = jnp.where(hv[:, None, :, None], slab, 0.0)
-            q, sc = halo_exchange.quantize_rows(slab, settings.precision)
-            cache = {"data": q} if sc is None else {"data": q, "scale": sc}
+            if use_projected:
+                # Fresh rows projected once over the full-graph table (N
+                # rows per layer) rather than per-subgraph slabs.
+                cache = {}
+                for ell in range(cfg.num_layers - 1):
+                    w = state["params"][f"layer_{ell + 1}"]["w"]
+                    z = jnp.einsum("nd,dhk->nhk", reps[ell], w)
+                    z = z.reshape(z.shape[0], -1)[ids]      # (M, H+1, w)
+                    z = jnp.where(hv[:, :, None], z, 0.0)
+                    q, sc = halo_exchange.quantize_rows(
+                        z, settings.precision)
+                    cache[f"z{ell}"] = q[:, None]
+                    if sc is not None:
+                        cache[f"z{ell}_scale"] = sc[:, None]
+            else:
+                slab = jnp.stack([rep[ids] for rep in reps], axis=1)
+                slab = jnp.where(hv[:, None, :, None], slab, 0.0)
+                q, sc = halo_exchange.quantize_rows(slab,
+                                                    settings.precision)
+                cache = ({"data": q} if sc is None
+                         else {"data": q, "scale": sc})
         elif settings.mode == "digest":
             do_pull = (r % settings.sync_interval == 0)
             if settings.pull_on_first_epoch:
@@ -228,14 +347,29 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
             # PULL = collective gather of each subgraph's halo slots from
             # the owner shards (Algorithm 1 line 5).
             if settings.pull_mode == "collective":
-                def _pull():
+                def _pull_store(zs):
                     return halo_exchange.collective_pull(
-                        state["store"], data["pull_send"],
-                        data["pull_recv"], halo_size, mesh)
+                        zs, data["pull_send"], data["pull_recv"],
+                        halo_size, mesh)
+            else:
+                def _pull_store(zs):
+                    return halo_exchange.pull_slab(zs, data["halo_slots"])
+            if use_projected:
+                def _pull():
+                    # Owner-shard projection (once per layer) + the same
+                    # ragged routing, one exchange per z tensor.
+                    new_cache = {}
+                    for key, zs in project_store_tables(
+                            state["store"], state["params"], cfg,
+                            settings.precision).items():
+                        slab = _pull_store(zs)
+                        new_cache[key] = slab["data"]
+                        if "scale" in slab:
+                            new_cache[f"{key}_scale"] = slab["scale"]
+                    return new_cache
             else:
                 def _pull():
-                    return halo_exchange.pull_slab(state["store"],
-                                                   data["halo_slots"])
+                    return _pull_store(state["store"])
             cache = jax.lax.cond(do_pull, _pull, lambda: state["cache"])
         else:
             cache = state["cache"]
@@ -247,13 +381,24 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
             # Layer 0 gathers raw halo features from this subgraph's
             # feature slab; layers ℓ≥1 gather stale reps straight from its
             # pulled storage-precision slab — both via the fused
-            # pull+aggregate path with the per-subgraph halo-slot ELL.
+            # pull+aggregate path with the per-subgraph halo-slot ELL and
+            # its precomputed chunk worklist.  Under GAT dedup the slab
+            # rows are pre-projected (projected_halo_ref) so the layer
+            # skips its per-subgraph W·h̃ einsum.
+            wl = (struct_m.get("wl_ids"), struct_m.get("wl_cnt"))
             tables = [halo_ref(x_h0, None, struct_m["out_nbr"],
-                               struct_m["out_wts"])]
+                               struct_m["out_wts"], *wl)]
             for ell in range(n_hidden):
-                tables.append(halo_ref(
-                    *halo_exchange.layer_table(cache_m, ell),
-                    struct_m["out_nbr"], struct_m["out_wts"]))
+                if use_projected:
+                    zsc = cache_m.get(f"z{ell}_scale")
+                    tables.append(projected_halo_ref(
+                        cache_m[f"z{ell}"][0],
+                        zsc[0] if zsc is not None else None,
+                        struct_m["out_nbr"], struct_m["out_wts"]))
+                else:
+                    tables.append(halo_ref(
+                        *halo_exchange.layer_table(cache_m, ell),
+                        struct_m["out_nbr"], struct_m["out_wts"], *wl))
             return loss_fn(params, x_loc, tables, struct_m, labels, mask)
 
         vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
@@ -361,11 +506,29 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
 
 def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0,
                precision: HaloPrecision = HaloPrecision()) -> dict:
+    check_worklist_geometry(cfg, data)
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
     num_slots = int(data["store_ids"].shape[0]) - 1
     l1 = max(cfg.num_layers - 1, 1)
     num_parts, s = data["local_ids"].shape
     halo_size = int(data["halo_ids"].shape[1])
+    if gat_projected(cfg):
+        # GAT dedup: the pulled cache holds per-layer *projected* slabs
+        # z{ell} = W_{ell+1}·h̃ of width heads·head_dim (= the consuming
+        # layer's dout), flat keys so the pytree stays one level deep for
+        # shardings/checkpoints.  Leading (M, 1, H+1, ·) matches the
+        # per-layer pull_slab/collective_pull output.
+        cache = {}
+        for ell in range(l1):
+            w_ell = cfg.layer_dims[ell + 1][1]
+            cache[f"z{ell}"] = jnp.zeros(
+                (num_parts, 1, halo_size + 1, w_ell), precision.dtype)
+            if precision.has_scale:
+                cache[f"z{ell}_scale"] = jnp.ones(
+                    (num_parts, 1, halo_size + 1, 1), jnp.float32)
+    else:
+        cache = halo_exchange.init_slab(num_parts, l1, halo_size,
+                                        cfg.hidden_dim, precision)
     state = {
         "params": params,
         "opt_state": opt.init(params),
@@ -375,8 +538,7 @@ def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0,
         # O(M·H·L·d) fp32 cache).
         "store": halo_exchange.init_store(l1, num_slots, cfg.hidden_dim,
                                           precision),
-        "cache": halo_exchange.init_slab(num_parts, l1, halo_size,
-                                         cfg.hidden_dim, precision),
+        "cache": cache,
         "epoch": jnp.asarray(0, jnp.int32),
         "step": jnp.asarray(0, jnp.int32),
     }

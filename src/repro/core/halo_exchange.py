@@ -57,6 +57,36 @@ by ``scale / 2 = max|row| / 254`` per element.  With
 rounding residual (:func:`push_ef`), so repeated pushes of slowly-moving
 representations stay unbiased at the same wire cost (Bai et al. 2023).
 
+Occupancy worklist (the chunk-skipping streamed read path)
+----------------------------------------------------------
+
+Non-pull epochs read the pulled per-subgraph slabs through the streamed
+``halo_spmm`` kernels, whose DMA schedule can consult a **static
+(row-block × chunk) worklist** computed once at partition time
+(:func:`repro.graph.partition.build_chunk_worklist` /
+``StackedPartitions.chunk_worklist``).  Format — CSR padded to a static
+width so it jits as two dense int32 arrays riding in the struct dict
+next to the out-ELL they were computed from:
+
+  ``wl_ids`` (M, n_row_blocks, max_chunks_per_block)
+      ascending slab-chunk ids row block i of subgraph m must visit;
+      entries past the valid prefix REPEAT the last visited chunk (0 for
+      empty blocks) so padded grid steps re-address the chunk already in
+      VMEM instead of DMA-ing a new one.
+  ``wl_cnt`` (M, n_row_blocks)
+      valid prefix length; the kernel masks grid steps ``t >= cnt`` out
+      of the accumulation, which keeps the skip stream **bitwise equal**
+      to the dense stream (skipped chunks contribute exact ±0.0 terms).
+
+Geometry is bound to the kernel tiling: 128-row output blocks
+(``kernels.spmm.BLOCK_ROWS``) over the padded S rows, ``chunk_rows``-row
+chunks over the (H+1)-row slab — rebuild the worklist when either
+changes.  The owner-sharded slot layout is what makes this pay: each
+subgraph's halo references cluster in a few owner shards, so measured
+occupancy (``ChunkWorklist.occupancy``, the static kernel-selection
+signal threaded through ``GNNConfig.halo_occupancy``) sits far below 1
+and streamed bytes scale with occupied work, not slab size.
+
 A store is a plain pytree (dict) so it drops into jitted state, pjit
 shardings and npz checkpoints unchanged:
 

@@ -1,6 +1,7 @@
 from repro.graph.graph import (EllMatrix, Graph, coo_to_ell, from_edges,
                                gcn_norm_weights)
-from repro.graph.partition import (PullPlan, StackedPartitions,
+from repro.graph.partition import (ChunkWorklist, PullPlan,
+                                   StackedPartitions, build_chunk_worklist,
                                    build_partitions, edge_cut,
                                    greedy_partition, partition_report,
                                    random_partition)
@@ -9,7 +10,8 @@ from repro.graph.generators import (DATASETS, make_dataset, powerlaw_graph,
 
 __all__ = [
     "EllMatrix", "Graph", "coo_to_ell", "from_edges", "gcn_norm_weights",
-    "PullPlan", "StackedPartitions", "build_partitions", "edge_cut",
+    "ChunkWorklist", "PullPlan", "StackedPartitions",
+    "build_chunk_worklist", "build_partitions", "edge_cut",
     "greedy_partition", "partition_report", "random_partition", "DATASETS",
     "make_dataset", "powerlaw_graph", "sbm_graph",
 ]

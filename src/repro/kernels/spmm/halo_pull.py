@@ -13,7 +13,7 @@ row block reads exactly the slab rows its edges touch, and int8 rows are
 dequantized in-register (VMEM traffic shrinks by the same 2–4× as the
 §3.3 wire format).
 
-Two grid/block designs share one inner loop:
+Three grid/block designs share one inner loop:
 
   * **Resident** (:func:`halo_spmm_pallas`): grid = (row_blocks,
     feature_blocks), the slab carried whole per feature-block into VMEM —
@@ -33,9 +33,25 @@ Two grid/block designs share one inner loop:
     across chunks — bitwise-reassociated vs. the resident kernel, equal
     within dtype tolerance.
 
+  * **Chunk-skipping streamed** (:func:`halo_spmm_skip_pallas`): same
+    tiling as the streaming kernel, but the innermost grid dimension is
+    re-indexed through a precomputed CSR-style worklist
+    (:class:`repro.graph.partition.ChunkWorklist`): grid = (row_blocks,
+    feature_blocks, ``max_chunks_per_block``), and the data BlockSpec's
+    index map reads ``wl_ids[i, t]`` from the scalar-prefetch argument —
+    row block i streams *only the chunks its edges reference* through
+    the same double-buffered pipeline.  Under owner-sharded slot layout
+    halo references cluster by owner, so measured occupancy is far below
+    1 and DMA bytes scale with occupied work, not slab size.  Padded
+    worklist entries repeat the last visited chunk (the resident block is
+    re-addressed, no DMA) and are masked out of the FMA (``t >= cnt``),
+    so the result is **bitwise identical** to the dense stream with the
+    same ``chunk_rows``: skipped chunks contribute exact ±0.0 terms,
+    which never perturb an fp32 accumulator.
+
 Per-row scales ride along as a (rows, 1) fp32 column and are folded into
 the edge weight (``w · scale[idx]``) before the FMA, so the inner loop
-stays a gather + single fused multiply-add in both designs.
+stays a gather + single fused multiply-add in all three designs.
 """
 from __future__ import annotations
 
@@ -113,6 +129,31 @@ def halo_spmm_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
     )(nbr, wts, data, scale)
 
 
+def _chunk_contrib(base, chunk_rows: int, nbr_ref, wts_ref, data_ref,
+                   scale_ref, out_shape):
+    """One chunk's masked gather/dequant/FMA partial sum — the single
+    inner loop both streamed kernels (dense and chunk-skipping) run, so
+    their bitwise-equality invariant has one source of truth.  Edges
+    whose slot falls outside [base, base + chunk_rows) contribute exact
+    ±0.0."""
+    deg = nbr_ref.shape[1]
+    table = data_ref[...]                        # (chunk_rows, BF) tile
+    scale = scale_ref[...][:, 0]                 # (chunk_rows,)
+
+    def body(k, acc):
+        idx = nbr_ref[:, k] - base
+        hit = (idx >= 0) & (idx < chunk_rows)
+        idx = jnp.where(hit, idx, 0)
+        gathered = jnp.take(table, idx, axis=0).astype(jnp.float32)
+        w = (wts_ref[:, k].astype(jnp.float32)
+             * jnp.take(scale, idx, axis=0)
+             * hit.astype(jnp.float32))
+        return acc + w[:, None] * gathered
+
+    return jax.lax.fori_loop(0, deg, body,
+                             jnp.zeros(out_shape, jnp.float32))
+
+
 def _make_stream_kernel(chunk_rows: int):
     def kernel(base_ref, nbr_ref, wts_ref, data_ref, scale_ref, out_ref):
         c = pl.program_id(2)
@@ -121,24 +162,9 @@ def _make_stream_kernel(chunk_rows: int):
         def _init():
             out_ref[...] = jnp.zeros_like(out_ref)
 
-        base = base_ref[c]
-        deg = nbr_ref.shape[1]
-        table = data_ref[...]                    # (chunk_rows, BF) tile
-        scale = scale_ref[...][:, 0]             # (chunk_rows,)
-
-        def body(k, acc):
-            idx = nbr_ref[:, k] - base
-            hit = (idx >= 0) & (idx < chunk_rows)
-            idx = jnp.where(hit, idx, 0)
-            gathered = jnp.take(table, idx, axis=0).astype(jnp.float32)
-            w = (wts_ref[:, k].astype(jnp.float32)
-                 * jnp.take(scale, idx, axis=0)
-                 * hit.astype(jnp.float32))
-            return acc + w[:, None] * gathered
-
-        acc = jax.lax.fori_loop(0, deg, body,
-                                jnp.zeros(out_ref.shape, jnp.float32))
-        out_ref[...] += acc
+        out_ref[...] += _chunk_contrib(base_ref[c], chunk_rows, nbr_ref,
+                                       wts_ref, data_ref, scale_ref,
+                                       out_ref.shape)
 
     return kernel
 
@@ -197,3 +223,142 @@ def halo_spmm_stream_pallas(nbr: jax.Array, wts: jax.Array,
         out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
         interpret=interpret,
     )(chunk_base, nbr, wts, data, scale)
+
+
+def _make_skip_kernel(chunk_rows: int, count_visits: bool):
+    def kernel(ids_ref, cnt_ref, nbr_ref, wts_ref, data_ref, scale_ref,
+               *out_refs):
+        out_ref = out_refs[0]
+        i = pl.program_id(0)
+        t = pl.program_id(2)
+
+        @pl.when(t == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        # Worklist lookup: this grid step carries slab chunk ids[i, t]
+        # (the data/scale BlockSpecs below used the same entry, so that
+        # chunk's tile is what sits in VMEM).  Entries at t >= cnt[i]
+        # repeat the previous chunk — already resident, no DMA — and are
+        # masked out of the accumulation here.
+        base = ids_ref[i, t] * chunk_rows
+        active = t < cnt_ref[i]
+
+        @pl.when(active)
+        def _accumulate():
+            out_ref[...] += _chunk_contrib(base, chunk_rows, nbr_ref,
+                                           wts_ref, data_ref, scale_ref,
+                                           out_ref.shape)
+
+        if count_visits:
+            visit_ref = out_refs[1]
+
+            @pl.when(pl.program_id(1) == 0)
+            def _log():
+                visit_ref[0, 0] = jnp.where(active, ids_ref[i, t],
+                                            jnp.int32(-1))
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_rows", "interpret",
+                                             "count_visits"))
+def halo_spmm_skip_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
+                          scale: jax.Array = None,
+                          wl_ids: jax.Array = None,
+                          wl_cnt: jax.Array = None,
+                          chunk_rows: int = STREAM_CHUNK_ROWS,
+                          interpret: bool = True,
+                          count_visits: bool = False):
+    """Chunk-skipping streamed pull+aggregate: occupancy-proportional DMA.
+
+    Same contract as :func:`halo_spmm_stream_pallas`, plus a precomputed
+    worklist (``repro.graph.partition.build_chunk_worklist`` with the
+    same ``chunk_rows`` and the kernel's 128-row blocks):
+
+      wl_ids: (row_blocks, max_chunks) int32 — ascending chunk ids each
+        row block must visit, padded by repeating the last entry.
+      wl_cnt: (row_blocks,) int32 — valid prefix length per block.
+
+    The innermost grid dimension runs over the *worklist position* t, and
+    the slab BlockSpec resolves it to chunk ``wl_ids[i, t]`` via scalar
+    prefetch — so the pipeline DMAs exactly the occupied chunks (padded
+    steps re-address the resident block) while keeping the streaming
+    kernel's double-buffered overlap and in-VMEM accumulator.  Bitwise
+    equal to the dense stream at the same ``chunk_rows``.
+
+    With ``count_visits=True`` a second output (row_blocks, max_chunks)
+    int32 records the chunk id processed at each (block, t) — ``-1`` at
+    masked padding steps — so tests can assert visited chunks ==
+    worklist entries.  Debug/interpret-mode only: the (1, 1) block shape
+    is not a legal TPU tile.
+    """
+    rows, deg = nbr.shape
+    n_tab, feat = data.shape
+    br = min(BLOCK_ROWS, rows)
+    bf = min(BLOCK_F, feat)
+    if rows % br or feat % bf:
+        raise ValueError(f"rows={rows} feat={feat} must be divisible by "
+                         f"block ({br},{bf}); pad upstream")
+    if wl_ids is None or wl_cnt is None:
+        raise ValueError("halo_spmm_skip_pallas needs the (wl_ids, wl_cnt)"
+                         " worklist; build it with "
+                         "repro.graph.partition.build_chunk_worklist")
+    n_blocks, max_chunks = wl_ids.shape
+    n_chunks = max(-(-n_tab // chunk_rows), 1)
+    if n_blocks != rows // br or wl_cnt.shape != (n_blocks,):
+        raise ValueError(
+            f"worklist geometry mismatch: wl_ids {wl_ids.shape} / wl_cnt "
+            f"{wl_cnt.shape} vs {rows // br} row blocks of {br} rows — "
+            f"rebuild the worklist with block_rows={br}")
+    if max_chunks > n_chunks:
+        # A well-formed worklist never lists more distinct chunks than
+        # the slab tiling has — a wider one means it was built with a
+        # smaller chunk_rows than this call's.  (The converse mismatch —
+        # a coarser worklist — is undetectable from the traced arrays;
+        # keep the build chunk_rows and the call chunk_rows wired to the
+        # same knob, as GNNConfig.stream_chunk_rows does.)
+        raise ValueError(
+            f"worklist chunk-geometry mismatch: wl_ids lists up to "
+            f"{max_chunks} chunks per block but a {n_tab}-row slab at "
+            f"chunk_rows={chunk_rows} has only {n_chunks} — rebuild the "
+            f"worklist with this chunk_rows")
+    if scale is None:
+        scale = jnp.ones((n_tab, 1), jnp.float32)
+    pad = (-n_tab) % chunk_rows
+    if pad:
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)), constant_values=1.0)
+
+    out_shape = [jax.ShapeDtypeStruct((rows, feat), jnp.float32)]
+    out_specs = [pl.BlockSpec((br, bf), lambda i, j, t, ids, cnt: (i, j))]
+    if count_visits:
+        out_shape.append(jax.ShapeDtypeStruct((n_blocks, max_chunks),
+                                              jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda i, j, t, ids, cnt: (i, t)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        # Worklist position innermost: the output block index is
+        # t-invariant (accumulator stays in VMEM) and the slab BlockSpec
+        # resolves t through the prefetched worklist, so the pipeline
+        # prefetches chunk ids[i, t+1] during chunk ids[i, t].
+        grid=(rows // br, feat // bf, max_chunks),
+        in_specs=[
+            pl.BlockSpec((br, deg), lambda i, j, t, ids, cnt: (i, 0)),
+            pl.BlockSpec((br, deg), lambda i, j, t, ids, cnt: (i, 0)),
+            pl.BlockSpec((chunk_rows, bf),
+                         lambda i, j, t, ids, cnt: (ids[i, t], j)),
+            pl.BlockSpec((chunk_rows, 1),
+                         lambda i, j, t, ids, cnt: (ids[i, t], 0)),
+        ],
+        out_specs=out_specs if count_visits else out_specs[0],
+    )
+    out = pl.pallas_call(
+        _make_skip_kernel(chunk_rows, count_visits),
+        grid_spec=grid_spec,
+        out_shape=out_shape if count_visits else out_shape[0],
+        interpret=interpret,
+    )(wl_ids, wl_cnt, nbr, wts, data, scale)
+    return out

@@ -5,12 +5,25 @@ reference on CPU (interpret-mode Pallas is Python-slow; the oracle is the
 same math).  Tests pin ``backend="pallas_interpret"`` to validate the kernel
 body itself.
 
-``halo_spmm``'s Pallas path picks between the VMEM-resident kernel and the
-streaming double-buffered one automatically: if the slab's 128-wide
-feature stripe would exceed ``RESIDENT_STRIPE_MAX_BYTES`` of VMEM it
-streams in ``STREAM_CHUNK_ROWS`` tiles instead.  Pin
-``backend="pallas_stream"`` / ``"pallas_stream_interpret"`` to force the
-streaming variant (tests / benchmarks).
+``halo_spmm``'s Pallas path picks between three kernels:
+
+  * **resident** — the slab's 128-wide feature stripe fits the
+    ``resident_max_bytes`` VMEM budget (default
+    ``RESIDENT_STRIPE_MAX_BYTES``): carry it whole into VMEM.
+  * **dense stream** — above the budget: chunked double-buffered DMA of
+    every ``chunk_rows``-row slab chunk past the accumulator tile.
+  * **skip stream** — above the budget *and* a (row_block × chunk)
+    worklist is supplied whose static measured ``occupancy`` is at or
+    below ``skip_occupancy_max`` (default ``SKIP_OCCUPANCY_MAX``): stream
+    only the chunks each row block references
+    (:func:`repro.kernels.spmm.halo_pull.halo_spmm_skip_pallas`).  At
+    high occupancy the worklist degenerates to the dense schedule while
+    paying the scalar-prefetch indirection, so the dense stream wins —
+    hence the threshold, overridable per call (it is a static, jit-cache-
+    keyed argument, like every selection knob here).
+
+Pin ``backend="pallas_stream[_interpret]"`` / ``"pallas_skip[_interpret]"``
+to force a specific streamed variant (tests / benchmarks).
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.kernels.spmm.halo_pull import (STREAM_CHUNK_ROWS,
                                           halo_spmm_pallas,
+                                          halo_spmm_skip_pallas,
                                           halo_spmm_stream_pallas)
 from repro.kernels.spmm.ref import halo_spmm_ref, spmm_ref
 from repro.kernels.spmm.spmm import BLOCK_F, spmm_pallas
@@ -29,6 +43,12 @@ from repro.kernels.spmm.spmm import BLOCK_F, spmm_pallas
 # 128-wide fp32 stripe hits this at 8k rows (int8: 32k rows).  Above it,
 # halo_spmm streams the slab through chunked double-buffered DMA.
 RESIDENT_STRIPE_MAX_BYTES = 4 * 1024 * 1024
+
+# Highest (row_block × chunk) occupancy at which the chunk-skipping
+# stream is auto-selected over the dense stream.  Above it most chunks
+# are visited anyway and the dense schedule's simpler (non-indirected)
+# prefetch wins; below it DMA bytes shrink proportionally to occupancy.
+SKIP_OCCUPANCY_MAX = 0.5
 
 
 def _pad_dim(x: jax.Array, axis: int, multiple: int,
@@ -64,27 +84,48 @@ def spmm(nbr: jax.Array, wts: jax.Array, table: jax.Array,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("backend", "resident_max_bytes"))
+                   static_argnames=("backend", "resident_max_bytes",
+                                    "chunk_rows", "occupancy",
+                                    "skip_occupancy_max"))
 def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
-              scale: jax.Array = None, backend: str = "auto",
-              resident_max_bytes: int = None) -> jax.Array:
+              scale: jax.Array = None, wl_ids: jax.Array = None,
+              wl_cnt: jax.Array = None, backend: str = "auto",
+              resident_max_bytes: int = None, chunk_rows: int = None,
+              occupancy: float = None,
+              skip_occupancy_max: float = None) -> jax.Array:
     """Fused halo pull+aggregate against the compact HaloExchange slab.
 
     out[i] = Σ_k wts[i,k] · dequant(data[nbr[i,k]]) with optional per-row
     int8 scales — the out-of-subgraph side of Eq. 5 read directly from
     storage precision (no materialized per-subgraph halo table).
 
-    ``resident_max_bytes`` overrides the module-level auto-stream
-    threshold; it is a static (jit-cache-keyed) argument, so an explicit
-    override never aliases executables traced with the default.
+    Optional occupancy-aware streaming (see module docstring for the
+    selection ladder):
+
+      wl_ids / wl_cnt: the (row_blocks, max_chunks)/(row_blocks,) chunk
+        worklist from ``repro.graph.partition.build_chunk_worklist`` —
+        built with the same ``chunk_rows`` and 128-row blocks.
+      occupancy: the worklist's static measured occupancy
+        (``ChunkWorklist.occupancy``), used for auto-selection; it is a
+        host-side float (jit-cache key), never a traced value.
+      chunk_rows / resident_max_bytes / skip_occupancy_max: overrides of
+        the module-level streaming constants; all static (jit-cache-
+        keyed), so an explicit override never aliases executables traced
+        with the defaults.
     """
     if backend == "auto":
         backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
     if backend == "jnp":
         return halo_spmm_ref(nbr, wts, data, scale)
 
-    interpret = backend not in ("pallas", "pallas_stream")
-    stream = backend.startswith("pallas_stream")
+    interpret = backend not in ("pallas", "pallas_stream", "pallas_skip")
+    force_stream = backend.startswith("pallas_stream")
+    force_skip = backend.startswith("pallas_skip")
+    has_worklist = wl_ids is not None and wl_cnt is not None
+    if force_skip and not has_worklist:
+        raise ValueError(f"backend={backend!r} needs the (wl_ids, wl_cnt)"
+                         " chunk worklist")
+    stream = force_stream or force_skip
     if not stream:
         # Auto-select: stream once the per-feature-block slab stripe
         # (data + scale column) outgrows the VMEM-resident budget.
@@ -94,13 +135,27 @@ def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
                                   * data.dtype.itemsize
                                   + (4 if scale is not None else 0))
         stream = stripe > resident_max_bytes
+    skip = force_skip
+    if stream and not force_stream and not force_skip and has_worklist:
+        # Skip-stream when the static measured occupancy says most
+        # (row_block, chunk) pairs are empty.
+        if skip_occupancy_max is None:
+            skip_occupancy_max = SKIP_OCCUPANCY_MAX
+        skip = occupancy is not None and occupancy <= skip_occupancy_max
+    if chunk_rows is None:
+        chunk_rows = STREAM_CHUNK_ROWS
     rows, feat = nbr.shape[0], data.shape[1]
     nbr_p = _pad_dim(nbr, 0, 128, value=data.shape[0] - 1)
     wts_p = _pad_dim(wts, 0, 128, value=0)
     dat_p = _pad_dim(data, 1, 128, value=0)
-    if stream:
+    if skip:
+        out = halo_spmm_skip_pallas(nbr_p, wts_p, dat_p, scale,
+                                    wl_ids=wl_ids, wl_cnt=wl_cnt,
+                                    chunk_rows=chunk_rows,
+                                    interpret=interpret)
+    elif stream:
         out = halo_spmm_stream_pallas(nbr_p, wts_p, dat_p, scale,
-                                      chunk_rows=STREAM_CHUNK_ROWS,
+                                      chunk_rows=chunk_rows,
                                       interpret=interpret)
     else:
         out = halo_spmm_pallas(nbr_p, wts_p, dat_p, scale,

@@ -21,3 +21,34 @@ def halo_spmm_ref(nbr: jax.Array, wts: jax.Array, data: jax.Array,
         w = w * jnp.take(scale[:, 0], nbr, axis=0)
     gathered = jnp.take(data, nbr, axis=0).astype(jnp.float32)
     return jnp.sum(w[..., None] * gathered, axis=1)
+
+
+def halo_spmm_skip_ref(nbr: jax.Array, wts: jax.Array, data: jax.Array,
+                       scale: jax.Array, wl_ids, wl_cnt,
+                       chunk_rows: int, block_rows: int = 128) -> jax.Array:
+    """Worklist-masked oracle for the chunk-skipping streamed kernel.
+
+    Accumulates only the contributions whose slab row falls inside a
+    *visited* chunk of the (row_block × chunk) worklist — so it equals
+    :func:`halo_spmm_ref` iff the worklist covers every referenced slot
+    (the completeness property the skip kernel's correctness rests on),
+    and it diverges loudly on a deliberately truncated worklist."""
+    import numpy as np
+
+    rows = nbr.shape[0]
+    ids = np.asarray(wl_ids)
+    cnt = np.asarray(wl_cnt)
+    n_blocks = ids.shape[0]
+    n_chunks = max(-(-data.shape[0] // chunk_rows), 1)
+    # visited[i, c]: chunk c is on row block i's worklist.
+    visited = np.zeros((n_blocks, n_chunks), bool)
+    for i in range(n_blocks):
+        visited[i, ids[i, :cnt[i]]] = True
+    visited = jnp.asarray(visited)
+    block_of = jnp.minimum(jnp.arange(rows) // block_rows, n_blocks - 1)
+    in_visited = visited[block_of[:, None], nbr // chunk_rows]
+    w = wts.astype(jnp.float32) * in_visited.astype(jnp.float32)
+    if scale is not None:
+        w = w * jnp.take(scale[:, 0], nbr, axis=0)
+    gathered = jnp.take(data, nbr, axis=0).astype(jnp.float32)
+    return jnp.sum(w[..., None] * gathered, axis=1)

@@ -33,7 +33,8 @@ from repro.optim import adam
 
 def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
                       hidden: int, classes: int, deg_in: int, deg_out: int,
-                      halo_frac: float, boundary_frac: float = 0.5):
+                      halo_frac: float, boundary_frac: float = 0.5,
+                      chunk_rows: int = 512):
     """ShapeDtypeStruct stand-ins for a partitioned graph (no host build —
     at 256 parts × 1M nodes the partitioner would dominate; shapes are what
     the compiler needs).  ``boundary_frac`` models |boundary| / N — the
@@ -52,12 +53,18 @@ def abstract_gnn_case(num_nodes: int, num_parts: int, feat: int,
     slots = num_parts * shard_rows
     # Ragged pull-plan width: halo spread uniformly over owners.
     K = max((H + num_parts - 1) // num_parts, 1)
+    # Chunk worklist of the out-ELL vs the (H+1)-row slab: 128-row output
+    # blocks, worst-case static width = every chunk occupied.
+    n_blocks = max(-(-S // 128), 1)
+    n_chunks = max(-(-(H + 1) // chunk_rows), 1)
     data = {
         "x_global": sds((rows, feat), f32),
         "struct": {"in_nbr": sds((num_parts, S, deg_in), i32),
                    "in_wts": sds((num_parts, S, deg_in), f32),
                    "out_nbr": sds((num_parts, S, deg_out), i32),
-                   "out_wts": sds((num_parts, S, deg_out), f32)},
+                   "out_wts": sds((num_parts, S, deg_out), f32),
+                   "wl_ids": sds((num_parts, n_blocks, n_chunks), i32),
+                   "wl_cnt": sds((num_parts, n_blocks), i32)},
         "local_ids": sds((num_parts, S), i32),
         "local_valid": sds((num_parts, S), jnp.bool_),
         "halo_ids": sds((num_parts, H), i32),
@@ -107,6 +114,30 @@ def main():
     ap.add_argument("--parts-per-device", type=int, default=1,
                     help="k subgraphs/owner shards per 'data' device "
                          "(M = k x data axis; the M > pod-size regime)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "auto", "pallas"),
+                    help="aggregation kernel backend the epoch lowers "
+                         "with; the forced-host-device dry run compiles "
+                         "for CPU, so only 'jnp' lowers here — 'auto'/"
+                         "'pallas' are for running this script on a real "
+                         "TPU pod, where the knobs below select kernels")
+    ap.add_argument("--stream-chunk-rows", type=int, default=512,
+                    help="slab rows per streamed halo_spmm chunk (also "
+                         "the abstract worklist geometry)")
+    ap.add_argument("--resident-max-bytes", type=int, default=None,
+                    help="VMEM budget above which halo_spmm streams "
+                         "(default: kernel RESIDENT_STRIPE_MAX_BYTES; "
+                         "Pallas backends only)")
+    ap.add_argument("--skip-occupancy-max", type=float, default=None,
+                    help="occupancy threshold for the chunk-skipping "
+                         "stream (default: kernel SKIP_OCCUPANCY_MAX; "
+                         "Pallas backends only)")
+    ap.add_argument("--halo-occupancy", type=float, default=None,
+                    help="assumed (row-block x chunk) occupancy of the "
+                         "abstract worklist (no host graph to measure it "
+                         "from); with a Pallas backend, a value at or "
+                         "below the threshold selects the skip-stream "
+                         "kernel in the lowered epoch")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -120,14 +151,19 @@ def main():
         num_parts *= mesh.shape[a]
 
     cfg = GNNConfig(model="gcn", num_layers=3, in_dim=args.feat,
-                    hidden_dim=args.hidden, num_classes=64)
+                    hidden_dim=args.hidden, num_classes=64,
+                    backend=args.backend,
+                    stream_chunk_rows=args.stream_chunk_rows,
+                    resident_max_bytes=args.resident_max_bytes,
+                    skip_occupancy_max=args.skip_occupancy_max,
+                    halo_occupancy=args.halo_occupancy)
     opt = adam(5e-3)
     precision = HaloPrecision(args.precision)
     settings = TrainSettings(sync_interval=10, mode="digest",
                              pull_mode=args.pull, precision=precision)
     data, S, H, rows, slots = abstract_gnn_case(
         args.nodes, num_parts, args.feat, args.hidden, 64, args.deg,
-        args.deg // 2, halo_frac=1.0)
+        args.deg // 2, halo_frac=1.0, chunk_rows=args.stream_chunk_rows)
 
     rep = NamedSharding(mesh, P())
     mdim = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
@@ -202,6 +238,8 @@ def main():
         "hidden": args.hidden, "precision": args.precision,
         "pull_mode": args.pull, "parts_per_device": args.parts_per_device,
         "store_slots": slots, "shard_rows": slots // num_parts,
+        "stream_chunk_rows": args.stream_chunk_rows,
+        "halo_occupancy": args.halo_occupancy,
         "hlo_flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll["total"],

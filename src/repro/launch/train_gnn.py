@@ -87,13 +87,47 @@ def main():
                          "subgraphs and owner shards per device)")
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size (1 on CPU)")
+    ap.add_argument("--halo-weight", type=float, default=0.0,
+                    help="boundary-aware partitioning: weight of the "
+                         "marginal-new-halo-rows term in the greedy "
+                         "streaming score (0 = classic edge-cut LDG)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "auto", "pallas"),
+                    help="aggregation kernel backend: 'jnp' reference "
+                         "(CPU default), 'auto' picks the Pallas kernels "
+                         "on TPU hosts, 'pallas' forces them — the "
+                         "streaming/skip knobs below act on the Pallas "
+                         "paths (the jnp oracle has no DMA to schedule)")
+    ap.add_argument("--stream-chunk-rows", type=int, default=None,
+                    help="slab rows per streamed halo_spmm chunk "
+                         "(default: kernel STREAM_CHUNK_ROWS; also sets "
+                         "the precomputed worklist geometry)")
+    ap.add_argument("--resident-max-bytes", type=int, default=None,
+                    help="VMEM budget above which halo_spmm streams the "
+                         "slab (default: kernel RESIDENT_STRIPE_MAX_BYTES)")
+    ap.add_argument("--skip-occupancy-max", type=float, default=None,
+                    help="highest measured (row-block x chunk) occupancy "
+                         "at which the chunk-skipping stream is selected "
+                         "over the dense stream (default: kernel "
+                         "SKIP_OCCUPANCY_MAX; >=1 forces it whenever "
+                         "streaming)")
+    ap.add_argument("--no-gat-dedup", action="store_true",
+                    help="disable the GAT owner-shard projection dedup "
+                         "(legacy per-subgraph halo projection)")
     args = ap.parse_args()
 
     g = make_dataset(args.dataset, scale=args.scale)
-    data = prepare_graph_data(g, args.parts)
+    data = prepare_graph_data(g, args.parts, halo_weight=args.halo_weight,
+                              stream_chunk_rows=args.stream_chunk_rows)
     cfg = GNNConfig(model=args.model, num_layers=3,
                     in_dim=g.features.shape[1], hidden_dim=64,
-                    num_classes=int(g.labels.max()) + 1)
+                    num_classes=int(g.labels.max()) + 1,
+                    backend=args.backend,
+                    stream_chunk_rows=args.stream_chunk_rows,
+                    resident_max_bytes=args.resident_max_bytes,
+                    skip_occupancy_max=args.skip_occupancy_max,
+                    halo_occupancy=data["_worklist"].occupancy,
+                    gat_halo_dedup=not args.no_gat_dedup)
     opt = adam(5e-3)
     settings = TrainSettings(
         sync_interval=args.interval, mode="digest", pull_mode=args.pull,
@@ -120,9 +154,13 @@ def main():
         state, m = epoch_fn(state, tdata)
     ev = evaluate(cfg, state["params"], tdata)
     sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
+    wl = data["_worklist"]
     print(f"mesh={dict(mesh.shape)} epochs={args.epochs} "
           f"loss={float(m['loss']):.4f} val_f1={float(ev['val_f1']):.4f} "
           f"({(time.perf_counter()-t0)/args.epochs:.3f}s/epoch)")
+    print(f"halo worklist: {wl.visited_chunks}/{wl.total_pairs} "
+          f"(row-block x chunk) pairs occupied "
+          f"({100 * wl.occupancy:.1f}%; chunk_rows={wl.chunk_rows})")
     print(f"store: {spec.store_nbytes()/1e6:.2f} MB total, "
           f"{spec.shard_nbytes()/1e6:.2f} MB/device; pull/sync: "
           f"sharded {sync['pull_bytes']/1e6:.2f} MB vs replicated "

@@ -44,20 +44,45 @@ Pytree = Any
 
 
 def halo_ref(data: jax.Array, scale: Optional[jax.Array],
-             nbr: jax.Array, wts: jax.Array) -> dict:
-    """Bundle a shared halo slab (with sentinel zero row last) + indices."""
+             nbr: jax.Array, wts: jax.Array,
+             wl_ids: Optional[jax.Array] = None,
+             wl_cnt: Optional[jax.Array] = None) -> dict:
+    """Bundle a shared halo slab (with sentinel zero row last) + indices.
+
+    ``wl_ids``/``wl_cnt`` optionally carry the (row_block × chunk)
+    occupancy worklist of this adjacency against the slab (see
+    :class:`repro.graph.partition.ChunkWorklist`), enabling the chunk-
+    skipping streamed kernel on the Pallas backends."""
     ref = {"data": data, "nbr": nbr, "wts": wts}
     if scale is not None:
         ref["scale"] = scale
+    if wl_ids is not None and wl_cnt is not None:
+        ref["wl_ids"] = wl_ids
+        ref["wl_cnt"] = wl_cnt
+    return ref
+
+
+def projected_halo_ref(zdata: jax.Array, zscale: Optional[jax.Array],
+                       nbr: jax.Array, wts: jax.Array) -> dict:
+    """Bundle a *pre-projected* GAT halo table: rows are ``W·h̃`` (flat
+    ``heads·head_dim`` wide, sentinel zero row last) computed once per
+    owner shard at pull time, so the layer skips its per-subgraph slab
+    projection entirely (see ``repro.core.digest`` and the GAT dedup
+    notes in this module's layer code)."""
+    ref = {"zdata": zdata, "nbr": nbr, "wts": wts}
+    if zscale is not None:
+        ref["zscale"] = zscale
     return ref
 
 
 def _as_halo_ref(table, struct: dict) -> dict:
-    """Normalize a legacy (H, d) table to the halo-ref form."""
+    """Normalize a legacy (H, d) table to the halo-ref form, picking up
+    the adjacency's chunk worklist when the struct dict carries one."""
     if isinstance(table, dict):
         return table
     return halo_ref(_pad_sentinel(table), None,
-                    struct["out_nbr"], struct["out_wts"])
+                    struct["out_nbr"], struct["out_wts"],
+                    struct.get("wl_ids"), struct.get("wl_cnt"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +96,22 @@ class GNNConfig:
     normalize: bool = True        # Algorithm 1 line 11 (L2 per node)
     residual: bool = False
     backend: str = "jnp"          # aggregation backend (jnp | pallas*)
+    # -- streamed halo_spmm knobs (static; override the module constants
+    # of repro.kernels.spmm.ops — None keeps the kernel defaults) -------
+    stream_chunk_rows: Optional[int] = None    # STREAM_CHUNK_ROWS
+    resident_max_bytes: Optional[int] = None   # RESIDENT_STRIPE_MAX_BYTES
+    skip_occupancy_max: Optional[float] = None  # SKIP_OCCUPANCY_MAX
+    # Measured (row_block × chunk) occupancy of the partition's chunk
+    # worklist (ChunkWorklist.occupancy) — a host-side float the launcher
+    # copies in after building the data; drives skip-vs-dense stream
+    # auto-selection.  None disables the skip stream under backend="auto"
+    # selection (forced "pallas_skip*" backends still work).
+    halo_occupancy: Optional[float] = None
+    # GAT: project each owner shard's stale halo rows once per layer at
+    # pull time and ship projected rows (True, the dedup path) instead of
+    # re-projecting every subgraph's (H+1, d) slab every epoch (False,
+    # the legacy ~M×-redundant path, kept for A/B cost comparison).
+    gat_halo_dedup: bool = True
 
     @property
     def layer_dims(self) -> list[tuple[int, int]]:
@@ -126,12 +167,24 @@ def gnn_specs(cfg: GNNConfig) -> Pytree:
 # Layers
 # ---------------------------------------------------------------------------
 
+def _halo_agg(cfg, ref: dict, wts: jax.Array) -> jax.Array:
+    """Out-of-subgraph fused pull+aggregate with the config's streaming
+    knobs (chunk size, VMEM budget, occupancy-driven chunk skipping)
+    threaded into the kernel selection in repro.kernels.spmm.ops."""
+    return halo_spmm(ref["nbr"], wts, ref["data"], ref.get("scale"),
+                     wl_ids=ref.get("wl_ids"), wl_cnt=ref.get("wl_cnt"),
+                     backend=cfg.backend,
+                     resident_max_bytes=cfg.resident_max_bytes,
+                     chunk_rows=cfg.stream_chunk_rows,
+                     occupancy=cfg.halo_occupancy,
+                     skip_occupancy_max=cfg.skip_occupancy_max)
+
+
 def _gcn_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
     ref = _as_halo_ref(x_halo, struct)
     agg = spmm(struct["in_nbr"], struct["in_wts"], _pad_sentinel(x_local),
                backend=cfg.backend)
-    agg = agg + halo_spmm(ref["nbr"], ref["wts"], ref["data"],
-                          ref.get("scale"), backend=cfg.backend)
+    agg = agg + _halo_agg(cfg, ref, ref["wts"])
     return dense(agg, p["w"], p["b"])
 
 
@@ -144,8 +197,7 @@ def _sage_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
     denom = jnp.maximum(denom, 1e-12)
     agg = spmm(struct["in_nbr"], in_w / denom, _pad_sentinel(x_local),
                backend=cfg.backend)
-    agg = agg + halo_spmm(ref["nbr"], out_w / denom, ref["data"],
-                          ref.get("scale"), backend=cfg.backend)
+    agg = agg + _halo_agg(cfg, ref, out_w / denom)
     return (dense(x_local, p["w_self"]) + dense(agg, p["w_nbr"]) + p["b"])
 
 
@@ -165,17 +217,29 @@ def _multihead_spmm(nbr, att, z_pad, backend):
 def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
     S = x_local.shape[0]
     ref = _as_halo_ref(x_halo, struct)
-    # GAT needs halo rows densely (projection + attention scores), so the
-    # slab is dequantized here; when it enters vmap unbatched (shared
-    # compact store) this — and the projection below — happens once for
-    # all subgraphs, not per subgraph.
-    x_out = ref["data"].astype(jnp.float32)
-    if "scale" in ref:
-        x_out = x_out * ref["scale"]
-    T = x_out.shape[0]                            # slab rows incl. sentinel
     heads, dh = p["a_src"].shape
     z_loc = jnp.einsum("sd,dhk->shk", x_local, p["w"])    # (S, heads, dh)
-    z_out = jnp.einsum("sd,dhk->shk", x_out, p["w"])      # (T, heads, dh)
+    if "zdata" in ref:
+        # Pre-projected halo table (projected_halo_ref): rows are already
+        # W·h̃, projected ONCE per owner shard at pull time instead of
+        # once per subgraph per epoch — the owner-shard dedup path.  Only
+        # the (cheap) attention scores below still use this epoch's
+        # a_src.
+        z_out = ref["zdata"].astype(jnp.float32)
+        if "zscale" in ref:
+            z_out = z_out * ref["zscale"]
+        T = z_out.shape[0]                        # slab rows incl. sentinel
+        z_out = z_out.reshape(T, heads, dh)
+    else:
+        # Legacy: dequantize the raw halo rows and project here.  When the
+        # slab enters vmap unbatched (a shared store slab) this happens
+        # once for all subgraphs; with device-local per-subgraph slabs it
+        # is the M×-redundant projection the dedup path removes.
+        x_out = ref["data"].astype(jnp.float32)
+        if "scale" in ref:
+            x_out = x_out * ref["scale"]
+        T = x_out.shape[0]                        # slab rows incl. sentinel
+        z_out = jnp.einsum("sd,dhk->shk", x_out, p["w"])  # (T, heads, dh)
 
     s_dst = jnp.einsum("shk,hk->sh", z_loc, p["a_dst"])   # (S, heads)
     src_loc = jnp.einsum("shk,hk->sh", z_loc, p["a_src"])  # (S, heads)

@@ -65,11 +65,21 @@ def collective_counts(hlo_text: str) -> dict:
     return counts
 
 
-def expected_all_to_all(storage: str) -> int:
-    """all-to-all count of one collective PULL: one op per store tensor
-    ({data} or {data, scale}), the (L-1)-layer axis batched inside the
-    exchange buffer — so the count is independent of depth."""
-    return 2 if storage == "int8" else 1
+def expected_all_to_all(storage: str, model: str = "gcn",
+                        num_layers: int = None) -> int:
+    """all-to-all count of one collective PULL.
+
+    gcn/sage pull the raw store: one op per store tensor ({data} or
+    {data, scale}), the (L-1)-layer axis batched inside the exchange
+    buffer — independent of depth.  gat (projected-row pull) exchanges
+    one z tensor per hidden layer (widths differ per layer, so layers
+    cannot batch into one buffer): (L-1) ops, ×2 with int8 scales."""
+    per_tensor = 2 if storage == "int8" else 1
+    if model != "gat":
+        return per_tensor
+    if num_layers is None:
+        num_layers = 2                    # make_epoch's gat default
+    return per_tensor * (num_layers - 1)
 
 
 def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",

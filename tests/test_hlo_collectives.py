@@ -13,8 +13,11 @@ epoch's partitioned HLO must contain
     movement is explicit collectives; see tests/hlo_utils.py).
 
 Checked for M == devices and M == 2·devices (parts-per-device = 2) on a
-forced 8-device host mesh; the dense-gather fallback is compiled too as
-a positive control (it *does* materialize all-gathers).
+forced 8-device host mesh; GAT's projected-row pull (owner-shard
+projection dedup) is censused separately — the shard-local projection
+einsums must add zero collectives beyond the per-layer z exchanges; the
+dense-gather fallback is compiled too as a positive control (it *does*
+materialize all-gathers).
 """
 import os
 import sys
@@ -50,6 +53,23 @@ def _hlo_checks():
             # collectives and they do exist (sanity that the census
             # sees the module at all).
             assert c["all-reduce"] > 0, (label, c)
+
+    # GAT projected-row pull: the owner-shard projection (once per layer,
+    # shard-local einsum on the slot-sharded store) must add ZERO extra
+    # collectives — still one all-to-all per pulled z tensor per hidden
+    # layer, still no all-gather/permute/reduce-scatter.
+    for storage in ("fp32", "int8"):
+        compiled = hlo_utils.compile_epoch(
+            g, D, mesh, storage=storage, pull_mode="collective",
+            model="gat")
+        c = hlo_utils.collective_counts(compiled.as_text())
+        label = f"gat D={D} {storage}"
+        assert c["all-gather"] == 0, (label, c)
+        assert c["collective-permute"] == 0, (label, c)
+        assert c["reduce-scatter"] == 0, (label, c)
+        assert c["all-to-all"] == hlo_utils.expected_all_to_all(
+            storage, model="gat"), (label, c)
+        assert c["all-reduce"] > 0, (label, c)
 
     # Positive control: the partitioner-dependent gather/scatter
     # fallback DOES replicate the slab (all-gathers, no all-to-all) —
