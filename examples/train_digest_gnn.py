@@ -62,6 +62,11 @@ def main():
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size for --pull collective "
                          "(1 on a single-device host)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="mesh pod-axis size for --pull collective; "
+                         "> 1 runs the two-stage multi-pod exchange "
+                         "(--parts must be a multiple of pods x "
+                         "data-axis)")
     ap.add_argument("--halo-weight", type=float, default=0.0,
                     help="boundary-aware partitioning score weight "
                          "(0 = classic edge-cut LDG)")
@@ -94,10 +99,12 @@ def main():
 
     mesh = None
     if args.pull == "collective":
+        from repro.core import check_collective_geometry
         from repro.launch.mesh import make_host_mesh
-        mesh = make_host_mesh(data=args.data_axis)
-        ppd = data["_sp"].shards_per_device(args.data_axis)
-        print(f"collective mode: {ppd} subgraph(s) per device")
+        mesh = make_host_mesh(data=args.data_axis, pod=args.pods)
+        ppd = check_collective_geometry(data, mesh)
+        print(f"collective mode: {ppd} subgraph(s) per device over "
+              f"{dict(mesh.shape)}")
     state, hist = digest_train(
         cfg, adam(args.lr), data,
         TrainSettings(sync_interval=args.interval, mode="digest",

@@ -1,8 +1,9 @@
 """DIGEST core: the paper's contribution as a composable JAX module."""
-from repro.core.digest import (MODES, TrainSettings, digest_train, evaluate,
-                               full_graph_forward, gat_projected, init_state,
-                               make_epoch_fn, prepare_graph_data,
-                               project_store_tables)
+from repro.core.digest import (MODES, TrainSettings,
+                               check_collective_geometry, digest_train,
+                               evaluate, full_graph_forward, gat_projected,
+                               init_state, make_epoch_fn,
+                               prepare_graph_data, project_store_tables)
 from repro.core.async_engine import (AsyncSettings, digest_a_train,
                                      sync_time_per_round)
 from repro.core.error_bound import measure_error_and_bound, quantization_eps
@@ -13,7 +14,8 @@ from repro.core.halo_exchange import HaloPrecision, HaloSpec
 from repro.core import stale_store
 
 __all__ = [
-    "MODES", "TrainSettings", "digest_train", "evaluate",
+    "MODES", "TrainSettings", "check_collective_geometry",
+    "digest_train", "evaluate",
     "full_graph_forward", "gat_projected", "init_state", "make_epoch_fn",
     "prepare_graph_data", "project_store_tables",
     "AsyncSettings", "digest_a_train",

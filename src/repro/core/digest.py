@@ -31,6 +31,15 @@ device's own shards (``shard_staleness_error``).  The compiled epoch
 then contains *no* cross-device scatter/gather for the halo state at
 all — a regression-tested invariant (tests/test_hlo_collectives.py),
 not a partitioner heuristic.
+
+The same ``pull_mode="collective"`` covers the multi-pod production
+mesh: when the supplied mesh carries a "pod" axis, the halo-exchange
+paths auto-detect it, shard M over the combined ("pod", "data") axes
+(k = M/(pods·data) subgraphs and owner shards per device) and run the
+PULL as the two-stage intra-pod ``all_to_all`` + inter-pod ``ppermute``
+exchange — bitwise-equal to the single-pod collective and the dense
+gather (tests/test_multipod.py; see the routing-table section of
+``repro.core.halo_exchange``).
 """
 from __future__ import annotations
 
@@ -180,6 +189,24 @@ def check_worklist_geometry(cfg: GNNConfig, data: dict) -> None:
             f"would silently skip referenced slab rows)")
 
 
+def check_collective_geometry(data: dict, mesh, axis: str = "data") -> int:
+    """Fail fast — before trace time — when the partition count cannot be
+    laid over the mesh's halo-exchange axes; returns k = parts/device.
+
+    The collective paths shard M over *every* exchange axis
+    (``halo_exchange.exchange_axes``: the "data" axis alone, or the
+    combined ("pod", "data") axes on a multi-pod mesh), so M must be a
+    whole multiple of pods·data.  The shard_map bodies would raise the
+    same spelled-out ValueError at trace time; calling this at launch /
+    train start surfaces it before any compilation work.  Works on real
+    and abstract (ShapeDtypeStruct) data dicts alike — only shapes are
+    read.
+    """
+    num_parts = int(data["local_slots"].shape[0])
+    return halo_exchange.shards_per_device(num_parts, mesh, axis,
+                                           "pull_mode='collective'")
+
+
 def project_store_tables(store: dict, params: Pytree, cfg: GNNConfig,
                          precision: HaloPrecision) -> dict:
     """GAT owner-shard projection dedup: project the *store*, not the slabs.
@@ -261,7 +288,9 @@ class TrainSettings:
     # SPMD shard_map epoch — ragged all_to_all pulls of only the
     # referenced slots, shard-local pushes and staleness reads (pass the
     # mesh to make_epoch_fn; needs num_parts to be a multiple of the
-    # "data" axis: k = parts/devices subgraphs + owner shards per device).
+    # exchange axes — the "data" axis, times "pod" on a multi-pod mesh
+    # where the pull runs the two-stage intra-pod/inter-pod exchange:
+    # k = parts/devices subgraphs + owner shards per device).
     pull_mode: str = "gather"
     # LLCG-style server correction (for the partition-based baseline): one
     # extra server-side gradient step per round on a sampled node batch
@@ -567,7 +596,10 @@ def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     """Run training; returns (final_state, history dict of lists).
 
     ``mesh`` is required for ``pull_mode="collective"`` (the explicit
-    shard_map pull/push paths); the default gather mode ignores it."""
+    shard_map pull/push paths — single- or multi-pod; the exchange
+    auto-detects a "pod" axis); the default gather mode ignores it."""
+    if settings.pull_mode == "collective" and mesh is not None:
+        check_collective_geometry(data, mesh)
     state = init_state(cfg, opt, data, seed=seed,
                        precision=settings.precision)
     epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh))

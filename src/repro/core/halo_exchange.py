@@ -87,6 +87,43 @@ occupancy (``ChunkWorklist.occupancy``, the static kernel-selection
 signal threaded through ``GNNConfig.halo_occupancy``) sits far below 1
 and streamed bytes scale with occupied work, not slab size.
 
+Multi-pod two-stage routing (the ("pod", "data") mesh)
+------------------------------------------------------
+
+The collective paths auto-detect the mesh shape
+(:func:`exchange_axes`): on a single-pod mesh M is sharded over the
+"data" axis alone and a pull is one ragged ``all_to_all``; on the
+production multi-pod mesh (axes ``("pod", "data", "model")``) M is
+sharded over the **combined** ``("pod", "data")`` axes — device
+``(p, d)`` owns the ``k = M/(pods·data)`` shards of combined block
+``e = p·data + d`` — and the exchange runs in **two stages**, mirroring
+how DistDGL-style systems split inter-machine from intra-machine
+traffic:
+
+  1. *intra-pod*: one ragged ``all_to_all`` over "data", routing every
+     (owner, requester) block by the requester's **data coordinate**
+     d_r within the owner's pod — after this hop, device ``(p, d)``
+     holds every block its pod owns that is destined for data-column d
+     of *any* pod;
+  2. *inter-pod*: ``pods − 1`` shifted ``ppermute`` rounds over "pod"
+     (a **single collective-permute per store tensor** on the 2-pod
+     production mesh), routing by the requester's pod coordinate p_r —
+     only this stage rides the slow inter-pod links, and it ships each
+     row exactly once.
+
+No routing table changes: the :class:`~repro.graph.partition.PullPlan`
+is the same (M_owner, M_req, K) pair of tables — send offsets owner-
+local, recv positions requester-local — and the two-stage kernel merely
+*re-blocks* the requester axis as ``(d_r, p_r, b)`` for stage 1 and
+``(p_r, d_o, b)`` for stage 2 (b the requester-local shard index,
+d_o the owner's data coordinate).  Flattening the owner axis back as
+``(p_o, d_o, a)`` reproduces the exact single-axis ordering, which is
+why multi-pod pulls/pushes are **bitwise equal** to the single-pod
+collective and the dense-gather fallback (gathers, transposes and
+scatters only — regression-pinned in tests/test_multipod.py).  Pushes
+and the Theorem-1 staleness probe stay owner-local on any mesh shape:
+they only need the combined block index ``e``, never a collective.
+
 A store is a plain pytree (dict) so it drops into jitted state, pjit
 shardings and npz checkpoints unchanged:
 
@@ -323,17 +360,48 @@ def pull_slab(store: dict, halo_slots: jax.Array) -> dict:
     return out
 
 
+def exchange_axes(mesh, axis: str = "data") -> tuple:
+    """Mesh axes the halo exchange shards M over — the auto-detection
+    behind ``pull_mode="collective"``.
+
+    Single-pod meshes exchange over ``(axis,)``; a mesh carrying a
+    "pod" axis exchanges over the combined ``("pod", axis)`` — device
+    ``(p, d)`` then owns combined block ``e = p·mesh[axis] + d`` and
+    pulls run the two-stage intra-pod/inter-pod exchange (see the
+    module docstring's routing-table section).
+    """
+    return ("pod", axis) if "pod" in mesh.axis_names else (axis,)
+
+
+def exchange_size(mesh, axis: str = "data") -> int:
+    """Total devices along the exchange axes (pods · data)."""
+    num = 1
+    for a in exchange_axes(mesh, axis):
+        num *= int(mesh.shape[a])
+    return num
+
+
+def _combined_index(mesh, axis: str = "data"):
+    """Traced combined block index e = p·data + d of the calling device
+    (inside ``shard_map``); plain data index on single-pod meshes."""
+    e = jax.lax.axis_index(axis)
+    if "pod" in mesh.axis_names:
+        e = e + jax.lax.axis_index("pod") * int(mesh.shape[axis])
+    return e
+
+
 def shards_per_device(num_parts: int, mesh, axis: str = "data",
                       what: str = "collective halo exchange") -> int:
-    """k = num_parts / mesh[axis] — owner shards resident on each device.
+    """k = num_parts / (pods · mesh[axis]) — owner shards per device.
 
     Mesh-facing form of the single authoritative divisibility check,
     :func:`repro.graph.partition.parts_per_device` (see there for why a
-    non-multiple M must be rejected loudly).
+    non-multiple M must be rejected loudly).  Counts every exchange
+    axis, so the multi-pod mesh needs M to be a multiple of pods·data.
     """
     from repro.graph.partition import parts_per_device
 
-    return parts_per_device(num_parts, int(mesh.shape[axis]), what)
+    return parts_per_device(num_parts, exchange_size(mesh, axis), what)
 
 
 def collective_pull(store: dict, send_offsets: jax.Array,
@@ -358,16 +426,41 @@ def collective_pull(store: dict, send_offsets: jax.Array,
       recv_positions: (M, M, K) PullPlan.recv_positions.
       halo_size: H — per-subgraph halo slots (slab gets H+1 rows).
     Returns the same pytree as :func:`pull_slab`.
-    Raises ValueError when M is not a multiple of the mesh axis.
+    Raises ValueError when M is not a multiple of the exchange axes
+    (pods · data on a multi-pod mesh).
     """
     from jax.experimental.shard_map import shard_map
 
-    num = mesh.shape[axis]
+    axes = exchange_axes(mesh, axis)
+    num_data = int(mesh.shape[axis])
+    pods = int(mesh.shape["pod"]) if len(axes) == 2 else 1
     M, _, K = send_offsets.shape
     k = shards_per_device(M, mesh, axis, "collective_pull")
     l1, rows_total, hidden = store["data"].shape
     shard_rows = rows_total // M
     has_scale = "scale" in store
+
+    def _pod_permute(g1):
+        # g1 (p_r, d_o, b, a, K, l1, w): blocks my pod owns, keyed by
+        # destination pod p_r.  Route them with pods-1 shifted ppermute
+        # rounds over "pod" (ONE collective-permute per tensor on the
+        # 2-pod production mesh) into (p_o, d_o, ...): blocks every pod
+        # p_o owns that are destined for me.  Only this hop crosses the
+        # inter-pod links, and each row ships exactly once.
+        my = jax.lax.axis_index("pod")
+        out = jax.lax.dynamic_update_index_in_dim(
+            jnp.zeros_like(g1),
+            jax.lax.dynamic_index_in_dim(g1, my, 0, keepdims=False),
+            my, 0)
+        for s in range(1, pods):
+            dst = jax.lax.rem(my + s, pods)
+            send = jax.lax.dynamic_index_in_dim(g1, dst, 0,
+                                                keepdims=False)
+            perm = [(i, (i + s) % pods) for i in range(pods)]
+            rcv = jax.lax.ppermute(send, "pod", perm)
+            src = jax.lax.rem(my - s + pods, pods)
+            out = jax.lax.dynamic_update_index_in_dim(out, rcv, src, 0)
+        return out
 
     def _exchange(table, send, recv, width, pad_value):
         # table (l1, k·shard_rows, width) — this device's k owner shards,
@@ -377,14 +470,23 @@ def collective_pull(store: dict, send_offsets: jax.Array,
         base = (jnp.arange(k, dtype=send.dtype)
                 * shard_rows)[:, None, None]
         rows = table[:, (send + base).reshape(-1), :]      # (l1, k·M·K, w)
-        # Flattened order is (owner-local a, requester m = e·k + b, K).
-        rows = rows.reshape(l1, k, num, k, K, width)
-        buf = jnp.transpose(rows, (2, 3, 1, 4, 0, 5))      # (e, b, a, K, l1, w)
+        # Flattened order is (owner-local a, requester m = e·k + b, K)
+        # with the requester's combined block e = p_r·num_data + d_r.
+        rows = rows.reshape(l1, k, pods, num_data, k, K, width)
+        # Stage 1 (intra-pod): route by the requester's data coordinate.
+        buf = jnp.transpose(rows, (3, 2, 4, 1, 5, 0, 6))
         got = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
-        # got[d, b, a] = rows owner device d ships from its local shard a
-        # to my local requester b — owner part j = d·k + a, matching the
-        # (M, K) flattened order of recv[b].
-        vals = jnp.transpose(got, (1, 0, 2, 3, 4, 5))
+        # got[d_o, p_r, b, a] = rows data-peer d_o of my pod ships toward
+        # (pod p_r, my data column), requester-local b, its local shard a.
+        got = jnp.swapaxes(got, 0, 1)                  # (p_r, d_o, b, a, …)
+        if pods > 1:
+            # Stage 2 (inter-pod): route by the requester's pod.
+            got = _pod_permute(got)
+        # got[p_o, d_o, b, a] = rows device (p_o, d_o) ships from its
+        # local shard a to my local requester b — owner part
+        # j = (p_o·num_data + d_o)·k + a, matching the (M, K) flattened
+        # order of recv[b].
+        vals = jnp.transpose(got, (2, 0, 1, 3, 4, 5, 6))
         vals = vals.reshape(k, M * K, l1, width)
         vals = jnp.moveaxis(vals, 1, 2)                    # (k, l1, M·K, w)
         slab = jnp.full((l1, halo_size + 1, width), pad_value, table.dtype)
@@ -394,9 +496,9 @@ def collective_pull(store: dict, send_offsets: jax.Array,
             lambda pos, v: slab.at[:, pos, :].set(v))(
                 recv.reshape(k, M * K), vals)              # (k, l1, H+1, w)
 
-    shard = P(None, axis, None)
-    plan = P(axis, None, None)
-    slab_spec = P(axis, None, None, None)
+    shard = P(None, axes, None)
+    plan = P(axes, None, None)
+    slab_spec = P(axes, None, None, None)
 
     if has_scale:
         def _body(data, scale, send, recv):
@@ -489,9 +591,13 @@ def shard_push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
     another device's slots.  :func:`push` is the SPMD fallback (same
     math, the partitioner already routes every row into the owner shard,
     but XLA cannot *prove* it and may materialize cross-device traffic).
-    Raises ValueError when M is not a multiple of the mesh axis."""
+    Works on single- and multi-pod meshes alike — the scatter is device-
+    local on any mesh shape, only the combined block index e = p·data + d
+    changes.  Raises ValueError when M is not a multiple of the
+    exchange axes."""
     from jax.experimental.shard_map import shard_map
 
+    axes = exchange_axes(mesh, axis)
     M = local_slots.shape[0]
     k = shards_per_device(M, mesh, axis, "shard_push")
     prec = precision_of(store)
@@ -500,11 +606,11 @@ def shard_push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
     def _scatter(data, scale, slots, valid, reps_blk):
         # data (l1, k·shard_rows, hid) — this device's k shards; slots /
         # valid (k, S); reps_blk (k, l1, S, hid).  Local part a (global
-        # part j = d·k + a) owns rows [a·shard_rows, (a+1)·shard_rows);
+        # part j = e·k + a) owns rows [a·shard_rows, (a+1)·shard_rows);
         # its slots all lie inside shard j by construction.
-        d = jax.lax.axis_index(axis)
+        e = _combined_index(mesh, axis)
         sent_local = (jnp.arange(k, dtype=jnp.int32) + 1) * shard_rows - 1
-        off = jnp.where(valid, slots - d * (k * shard_rows),
+        off = jnp.where(valid, slots - e * (k * shard_rows),
                         sent_local[:, None])               # (k, S)
         vals = jnp.where(valid[:, None, :, None], reps_blk, 0.0)
         q, sc = quantize_rows(vals, prec)
@@ -518,9 +624,9 @@ def shard_push(store: dict, local_slots: jax.Array, local_valid: jax.Array,
                             .at[:, sent_local, :].set(1.0))
         return new
 
-    shard = P(None, axis, None)
-    m_spec = P(axis, None)
-    reps_spec = P(axis, None, None, None)
+    shard = P(None, axes, None)
+    m_spec = P(axes, None)
+    reps_spec = P(axes, None, None, None)
 
     if has_scale:
         fn = shard_map(_scatter, mesh=mesh,
@@ -567,7 +673,11 @@ def owner_push(store: dict, owner: jax.Array, local_slots: jax.Array,
     out of the slab, scatter with owner-local offsets, write the shard
     back — a ``dynamic_update_slice`` of exactly ``shard_rows`` rows, so
     the write region is provably inside the owner's shard (no whole-slab
-    scatter for the partitioner to reason about).
+    scatter for the partitioner to reason about).  Addresses the slab by
+    owner *part*, never by device, so it is independent of how the M
+    shards are laid over mesh axes — the same worker push works whether
+    the store is placed on one device, a "data" axis, or the combined
+    multi-pod ("pod", "data") axes.
 
     local_slots: (S,) global store slots of this worker's local rows
       (its own sentinel at non-boundary rows); local_valid: (S,) bool;
@@ -618,10 +728,13 @@ def shard_staleness_error(store: dict, fresh: jax.Array,
     Here each device reads the rows of its k resident parts straight out
     of its local shards; only the final (L-1,)-sized max crosses devices.
     Same numbers as :func:`staleness_error` (max is order-free; the
-    gathers do no arithmetic).
+    gathers do no arithmetic).  Mesh-shape agnostic like
+    :func:`shard_push`: reads stay inside the device's own shards on
+    single- and multi-pod meshes (combined block index e = p·data + d).
     """
     from jax.experimental.shard_map import shard_map
 
+    axes = exchange_axes(mesh, axis)
     M, S = local_slots.shape
     k = shards_per_device(M, mesh, axis, "shard_staleness_error")
     has_scale = "scale" in store
@@ -631,8 +744,8 @@ def shard_staleness_error(store: dict, fresh: jax.Array,
         # data (l1, k·shard_rows, h); fresh_blk (k, l1, S, h); slots /
         # served_blk (k, S).  Every slot of a resident part lies inside
         # this device's block (non-boundary rows hit the owner sentinel).
-        d = jax.lax.axis_index(axis)
-        off = (slots - d * (k * shard_rows)).reshape(-1)
+        e = _combined_index(mesh, axis)
+        off = (slots - e * (k * shard_rows)).reshape(-1)
         stale = data[:, off, :].astype(jnp.float32)        # (l1, k·S, h)
         if scale is not None:
             stale = stale * scale[:, off, :]
@@ -641,10 +754,10 @@ def shard_staleness_error(store: dict, fresh: jax.Array,
         diff = jnp.where(served_blk[:, None, :], diff, 0.0)
         return jnp.max(diff, axis=(0, 2))[None]            # (1, l1)
 
-    shard = P(None, axis, None)
-    m_spec = P(axis, None)
-    reps_spec = P(axis, None, None, None)
-    out_spec = P(axis, None)
+    shard = P(None, axes, None)
+    m_spec = P(axes, None)
+    reps_spec = P(axes, None, None, None)
+    out_spec = P(axes, None)
 
     if has_scale:
         fn = shard_map(_body, mesh=mesh,

@@ -139,23 +139,28 @@ PARTITIONERS = {"greedy": greedy_partition, "random": random_partition,
 def parts_per_device(num_parts: int, num_devices: int,
                      what: str = "collective halo exchange") -> int:
     """k = num_parts / num_devices — owner shards (and subgraphs) on each
-    mesh data-axis device under the collective halo paths.
+    exchange-axis device under the collective halo paths.
 
-    The collective pull/push block the owner-sharded slot space (and the
-    PullPlan) into k contiguous shards per device, so any M that is a
-    *multiple* of the device count works (M > pod size = parts-per-device
-    > 1).  A non-multiple M would silently corrupt the owner-local slot
-    math (a device could not tell where its shards start), so it is
-    rejected loudly instead — this is the single authoritative check;
+    ``num_devices`` counts every mesh axis the exchange shards M over:
+    the "data" axis alone on a single-pod mesh, pods · data on the
+    multi-pod ("pod", "data") mesh (see
+    ``halo_exchange.exchange_axes``).  The collective pull/push block
+    the owner-sharded slot space (and the PullPlan) into k contiguous
+    shards per device, so any M that is a *multiple* of the device
+    count works (M > pod size = parts-per-device > 1).  A non-multiple
+    M would silently corrupt the owner-local slot math (a device could
+    not tell where its shards start), so it is rejected loudly instead
+    — this is the single authoritative check;
     ``halo_exchange.shards_per_device`` and
     ``StackedPartitions.shards_per_device`` both delegate here.
     """
     if num_devices <= 0 or num_parts % num_devices != 0:
         raise ValueError(
             f"{what}: num_parts={num_parts} must be a whole multiple of "
-            f"the mesh data axis ({num_devices} devices) — each device "
-            f"owns k = num_parts/{num_devices} contiguous shards, but "
-            f"{num_parts} % {max(num_devices, 1)} = "
+            f"the mesh exchange axes ({num_devices} devices — the "
+            f"\"data\" axis, times \"pod\" on a multi-pod mesh) — each "
+            f"device owns k = num_parts/{num_devices} contiguous "
+            f"shards, but {num_parts} % {max(num_devices, 1)} = "
             f"{num_parts % num_devices if num_devices > 0 else num_parts}"
             f".  Use a part count divisible by the device count, or the "
             f"dense-gather fallback (pull_slab / push / "

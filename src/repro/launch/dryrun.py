@@ -40,8 +40,7 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
 }
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+from repro.launch.hlo_census import COLLECTIVES as _COLLECTIVES
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
@@ -54,34 +53,18 @@ def cost_properties(compiled) -> dict:
     return cost or {}
 
 
-_IOTA_RE = re.compile(
-    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
-_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[\d,\{\} ]*\})\}")
-
-
 def _groups_cross_pod(line: str, pod_boundary: int) -> bool:
-    """True if any replica group spans devices on both sides of
-    ``pod_boundary`` (id < boundary vs >= boundary) — i.e. the collective
-    rides the slow inter-pod link."""
-    import numpy as np
-    m = _IOTA_RE.search(line)
-    if m:
-        ng, gs = int(m.group(1)), int(m.group(2))
-        dims = [int(x) for x in m.group(3).split(",")]
-        devices = np.arange(int(np.prod(dims))).reshape(dims)
-        if m.group(4):
-            perm = [int(x) for x in m.group(4).split(",")]
-            devices = devices.transpose(perm)
-        groups = devices.reshape(ng, gs)
-        lo = groups < pod_boundary
-        return bool(np.any(lo.any(axis=1) & (~lo).any(axis=1)))
-    m = _EXPLICIT_RE.search(line)
-    if m:
-        for grp in re.findall(r"\{([\d, ]+)\}", m.group(1)):
-            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
-            if ids and min(ids) < pod_boundary <= max(ids):
-                return True
-    return False
+    """True if any replica group / permute pair spans devices on both
+    sides of ``pod_boundary`` — i.e. the collective rides the slow
+    inter-pod link.  Group parsing (incl. collective-permute's
+    ``source_target_pairs``: the two-stage halo exchange's inter-pod
+    hop is exactly such an op, and it must show up in the inter-pod
+    byte split) is shared with tests/hlo_utils via
+    ``repro.launch.hlo_census``."""
+    from repro.launch.hlo_census import groups_cross_boundary, op_groups
+
+    groups = op_groups(line)
+    return bool(groups) and groups_cross_boundary(groups, pod_boundary)
 
 
 def collective_bytes(hlo_text: str, pod_boundary: int = 0) -> dict:
@@ -90,20 +73,18 @@ def collective_bytes(hlo_text: str, pod_boundary: int = 0) -> dict:
     ``pod_boundary`` > 0 additionally splits the total into intra-pod vs
     inter-pod bytes by replica-group analysis (devices [0, boundary) =
     pod 0)."""
+    from repro.launch.hlo_census import match_collective
+
     totals = {c: 0 for c in _COLLECTIVES}
     counts = {c: 0 for c in _COLLECTIVES}
     inter_pod = 0
     for line in hlo_text.splitlines():
         stripped = line.strip()
-        op = None
-        for c in _COLLECTIVES:
-            if re.search(rf"\s{c}(-start|-done)?\(", stripped):
-                op = c
-                break
+        # Shared op matching (-done lines skipped, counted at -start) —
+        # the test census must agree line for line.
+        op = match_collective(stripped)
         if op is None:
             continue
-        if f"{op}-done(" in stripped:
-            continue  # counted at -start
         lhs = stripped.split("=")[1] if "=" in stripped else stripped
         lhs = lhs.split(f" {op}")[0]
         nbytes = 0

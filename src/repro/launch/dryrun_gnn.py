@@ -2,12 +2,17 @@
 production mesh — M = k·256 subgraphs of a large synthetic graph, k per
 chip on the "data" axis (``--parts-per-device``), compact HaloExchange
 store sharded slot-wise.  ``--pull collective`` lowers the fully-SPMD
-shard_map epoch (ragged all_to_all pull, shard-local push) instead of
-the partitioner-dependent gather/scatter fallback.
+shard_map epoch instead of the partitioner-dependent gather/scatter
+fallback: the ragged all_to_all pull on the single-pod 16x16 mesh, the
+two-stage intra-pod all_to_all + inter-pod ppermute exchange over the
+("pod", "data") axes on the multi-pod 2x16x16 one (``--multi-pod`` /
+``--pods``), shard-local pushes on both — the lowered 512-chip program
+must carry ZERO all-gathers (the CI dry-run smoke asserts it from this
+script's census output).
 
   PYTHONPATH=src python -m repro.launch.dryrun_gnn [--multi-pod]
-  PYTHONPATH=src python -m repro.launch.dryrun_gnn --pull collective \\
-      --parts-per-device 2
+  PYTHONPATH=src python -m repro.launch.dryrun_gnn --multi-pod \\
+      --pull collective --parts-per-device 2
 
 Run as its own process (512 placeholder devices).
 """
@@ -107,10 +112,16 @@ def main():
                     choices=("fp32", "bf16", "int8"))
     ap.add_argument("--pull", default="gather",
                     choices=("gather", "collective"),
-                    help="collective = fully-SPMD shard_map epoch "
-                         "(ragged all_to_all pull + shard-local push); "
-                         "single-pod mesh only (the shard_map runs over "
-                         "the 'data' axis)")
+                    help="collective = fully-SPMD shard_map epoch: "
+                         "ragged all_to_all pull + shard-local push on "
+                         "a single pod; with --multi-pod/--pods the "
+                         "two-stage intra-pod all_to_all + inter-pod "
+                         "ppermute exchange over ('pod', 'data')")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="pod-axis size of the production mesh "
+                         "(default: 2 with --multi-pod, else 1; the "
+                         "forced host platform has 512 devices, so "
+                         "pods x 256 must fit)")
     ap.add_argument("--parts-per-device", type=int, default=1,
                     help="k subgraphs/owner shards per 'data' device "
                          "(M = k x data axis; the M > pod-size regime)")
@@ -141,10 +152,7 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    if args.pull == "collective" and args.multi_pod:
-        raise SystemExit("--pull collective needs the single-pod mesh "
-                         "(shard_map over the 'data' axis)")
-    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh = make_production_mesh(multi_pod=args.multi_pod, pods=args.pods)
     data_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
     num_parts = args.parts_per_device
     for a in data_axes:
@@ -161,6 +169,9 @@ def main():
     precision = HaloPrecision(args.precision)
     settings = TrainSettings(sync_interval=10, mode="digest",
                              pull_mode=args.pull, precision=precision)
+    # (No M-vs-mesh geometry check needed here: num_parts is derived
+    # from the mesh exchange axes above, so it divides by construction —
+    # unlike train_gnn/examples, where --parts is user-supplied.)
     data, S, H, rows, slots = abstract_gnn_case(
         args.nodes, num_parts, args.feat, args.hidden, 64, args.deg,
         args.deg // 2, halo_frac=1.0, chunk_rows=args.stream_chunk_rows)
@@ -209,7 +220,14 @@ def main():
     data_sh = {}
     for k, v in data.items():
         if k == "x_global":
-            data_sh[k] = NamedSharding(mesh, P(mdim, None))
+            # Feature-table rows shard over "data" ONLY — one replica
+            # per pod, sharded within it (same per-device residency as
+            # the single-pod layout).  Sharding rows over the combined
+            # ("pod", "data") axes makes XLA partition the layer-0
+            # x_global[ids] gathers with inter-pod index all-gathers;
+            # per-pod replication keeps those gathers intra-pod and the
+            # compiled epoch all-gather-free (the CI census gate).
+            data_sh[k] = NamedSharding(mesh, P("data", None))
         elif k == "store_ids":
             data_sh[k] = rep
         elif k in ("pull_send", "pull_recv"):
@@ -230,10 +248,20 @@ def main():
     compiled = lowered.compile()
     cost = cost_properties(compiled)
     mem = compiled.memory_analysis()
-    coll = collective_bytes(compiled.as_text())
+    # Census on the partitioned HLO: per-op byte totals AND op counts
+    # (the CI dry-run smoke asserts all-gather == 0 from this JSON);
+    # with a pod axis, replica-group analysis splits intra- vs
+    # inter-pod bytes (device ids [0, data·model) are pod 0).
+    pods = int(mesh.shape.get("pod", 1))
+    # Devices per pod from the MESH shape (data·model), not the forced
+    # host device count — logical ids [0, data·model) are pod 0
+    # regardless of how many placeholder devices the platform exposes.
+    pod_boundary = (int(mesh.shape["data"] * mesh.shape["model"])
+                    if pods > 1 else 0)
+    coll = collective_bytes(compiled.as_text(), pod_boundary)
     out = {
         "case": "digest_gnn_epoch",
-        "mesh": "2x16x16" if args.multi_pod else "16x16",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
         "nodes": args.nodes, "parts": num_parts, "S": S, "H": H,
         "hidden": args.hidden, "precision": args.precision,
         "pull_mode": args.pull, "parts_per_device": args.parts_per_device,
@@ -244,6 +272,8 @@ def main():
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll["total"],
         "collective_per_op": coll["per_op"],
+        "collective_counts": coll["counts"],
+        "collective_inter_pod_bytes": coll["inter_pod"],
         "compute_term_s": float(cost.get("flops", 0.0)) / PEAK_FLOPS,
         "memory_term_s": float(cost.get("bytes accessed", 0.0)) / HBM_BW,
         "collective_term_s": coll["total"] / ICI_BW,

@@ -1,0 +1,73 @@
+"""Shared parsing of collective ops in compiled-HLO text.
+
+One home for the device-group grammar of XLA's collective ops, used by
+both the dry-run roofline census (``repro.launch.dryrun``) and the test
+harness (``tests/hlo_utils``) — the two consumers must never disagree
+about what counts as a group, or the CI inter-pod byte split and the
+per-axis census could drift apart.  Import-safe by construction: pure
+regex + numpy, no jax import (``dryrun`` itself sets ``XLA_FLAGS`` at
+import time and must not be imported by tests).
+
+Grammar covered (one line per op in ``Compiled.as_text()``):
+
+  * explicit groups   ``replica_groups={{0,1,2,3},{4,5,6,7}}``
+  * iota groups       ``replica_groups=[ng,gs]<=[dims]`` with an
+                      optional ``T(perm)`` transpose suffix
+  * permute pairs     ``source_target_pairs={{0,4},{4,0},...}`` — each
+                      (src, tgt) pair is one two-device group, which is
+                      exactly what pod-crossing / axis classification
+                      needs
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[\d,\{\} ]*\})\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[\d,\{\} ]*\})\}")
+
+
+def match_collective(line: str):
+    """Collective-op name of one HLO line, or None.
+
+    Async pairs are attributed to the ``-start`` op; the matching
+    ``-done`` line returns None so censuses never double-count."""
+    s = line.strip()
+    for c in COLLECTIVES:
+        if f"{c}-done(" in s:
+            return None
+        if re.search(rf"\s{c}(-start)?\(", s):
+            return c
+    return None
+
+
+def op_groups(line: str):
+    """Device-id groups of one collective-op line, or None when the op
+    carries no parsable group attribute."""
+    m = _IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        devices = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            devices = devices.transpose(
+                [int(x) for x in m.group(4).split(",")])
+        return [list(map(int, grp)) for grp in devices.reshape(ng, gs)]
+    m = _EXPLICIT_RE.search(line) or _PAIRS_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.replace(" ", "").split(",") if x]
+                for grp in re.findall(r"\{([\d, ]+)\}", m.group(1))]
+    return None
+
+
+def groups_cross_boundary(groups, boundary: int) -> bool:
+    """True when any group spans device ids on both sides of
+    ``boundary`` (id < boundary vs >= boundary) — i.e. the collective
+    rides the link between the two id ranges (the inter-pod hop)."""
+    return any(g and min(g) < boundary <= max(g) for g in groups)

@@ -20,12 +20,22 @@ def _make_mesh(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pods: int = None):
     """Single pod: (16, 16) = 256 chips, axes (data, model).
-    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _make_mesh(shape, axes)
+    Multi-pod: (pods, 16, 16) chips, axes (pod, data, model) — the
+    default ``pods=2`` is the 512-chip production dry-run; ``pods``
+    overrides the pod count (>1 implies multi-pod)."""
+    if pods is None:
+        pods = 2 if multi_pod else 1
+    if pods < 1 or (multi_pod and pods < 2):
+        # A single-pod mesh under --multi-pod would silently validate
+        # the wrong program (the census record only names the shape).
+        raise ValueError(f"pods={pods} contradicts multi_pod={multi_pod}"
+                         f" — multi-pod needs pods >= 2, single-pod "
+                         f"exactly pods=1 (or omit pods)")
+    if pods > 1:
+        return _make_mesh((pods, 16, 16), ("pod", "data", "model"))
+    return _make_mesh((16, 16), ("data", "model"))
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):

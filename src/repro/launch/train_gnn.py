@@ -26,17 +26,25 @@ from repro.optim import adam
 
 
 def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
-    """Shard every stacked (M, ...) array over 'data'.  The compact
-    HaloExchange store is owner-sharded slot-wise (the partitioner groups
-    slots by owning part, so each device holds exactly the boundary rows
-    it pushes) and the pulled halo slabs (``state["cache"]``) are
-    device-local, sharded over their leading subgraph axis — nothing about
-    the stale state is replicated; pull epochs pay the §3.3 wire cost
-    once.  Params/opt replicated (GNN weights are tiny)."""
+    """Shard every stacked (M, ...) array over the mesh's halo-exchange
+    axes — the "data" axis alone, or the combined ("pod", "data") axes
+    when the mesh carries a pod axis (the multi-pod production layout;
+    device (p, d) then holds subgraph/shard block e = p·data + d).  The
+    compact HaloExchange store is owner-sharded slot-wise (the
+    partitioner groups slots by owning part, so each device holds
+    exactly the boundary rows it pushes) and the pulled halo slabs
+    (``state["cache"]``) are device-local, sharded over their leading
+    subgraph axis — nothing about the stale state is replicated; pull
+    epochs pay the §3.3 wire cost once.  Params/opt replicated (GNN
+    weights are tiny)."""
+    from repro.core.halo_exchange import exchange_axes
+
+    axes = exchange_axes(mesh)
+    mdim = axes if len(axes) > 1 else axes[0]
     rep = NamedSharding(mesh, P())
-    m_shard = NamedSharding(mesh, P("data"))
-    slot_shard = NamedSharding(mesh, P(None, "data", None))
-    slab_shard = NamedSharding(mesh, P("data", None, None, None))
+    m_shard = NamedSharding(mesh, P(mdim))
+    slot_shard = NamedSharding(mesh, P(None, mdim, None))
+    slab_shard = NamedSharding(mesh, P(mdim, None, None, None))
 
     data_sh = {}
     for k, v in data.items():
@@ -46,7 +54,7 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
             data_sh[k] = jax.tree.map(lambda _: rep, v)
         elif k in ("pull_send", "pull_recv"):
             # PullPlan routing: leading axis is the owner/requester part.
-            data_sh[k] = NamedSharding(mesh, P("data", None, None))
+            data_sh[k] = NamedSharding(mesh, P(mdim, None, None))
         elif k == "struct":
             data_sh[k] = {kk: m_shard for kk in v}
         else:
@@ -82,11 +90,19 @@ def main():
                     help="PULL transport: dense gather (XLA all-gather "
                          "fallback; any device count) or the fully-SPMD "
                          "shard_map path — ragged all_to_all pulls plus "
-                         "shard-local pushes; needs --parts to be a "
-                         "multiple of --data-axis (k = parts/data-axis "
-                         "subgraphs and owner shards per device)")
+                         "shard-local pushes (two-stage intra-pod + "
+                         "inter-pod exchange when --pods > 1); needs "
+                         "--parts to be a multiple of pods x data-axis "
+                         "(k = parts/devices subgraphs and owner shards "
+                         "per device)")
     ap.add_argument("--data-axis", type=int, default=1,
                     help="mesh data-axis size (1 on CPU)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="mesh pod-axis size; > 1 builds the multi-pod "
+                         "('pod', 'data') mesh — collective mode then "
+                         "runs the two-stage intra-pod all_to_all + "
+                         "inter-pod ppermute exchange and needs --parts "
+                         "to be a multiple of pods x data-axis")
     ap.add_argument("--halo-weight", type=float, default=0.0,
                     help="boundary-aware partitioning: weight of the "
                          "marginal-new-halo-rows term in the greedy "
@@ -133,13 +149,15 @@ def main():
         sync_interval=args.interval, mode="digest", pull_mode=args.pull,
         precision=HaloPrecision(args.precision,
                                 error_feedback=args.error_feedback))
-    mesh = make_host_mesh(data=args.data_axis, model=1)
+    mesh = make_host_mesh(data=args.data_axis, model=1, pod=args.pods)
     if args.pull == "collective":
         # Fail fast with the M-vs-mesh mismatch spelled out (the epoch
-        # would raise the same error at trace time).
-        ppd = data["_sp"].shards_per_device(args.data_axis)
+        # would raise the same error at trace time).  Counts every
+        # exchange axis: pods x data on a multi-pod mesh.
+        from repro.core import check_collective_geometry
+        ppd = check_collective_geometry(data, mesh)
         print(f"collective mode: {ppd} subgraph(s)/owner shard(s) "
-              f"per device")
+              f"per device over {dict(mesh.shape)}")
 
     state = init_state(cfg, opt, data, precision=settings.precision)
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}

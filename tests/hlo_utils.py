@@ -17,14 +17,16 @@ gradient all-reduces" — zero all-gathers, zero collective-permutes.
 from __future__ import annotations
 
 import os
-import re
 import subprocess
 import sys
 
 import jax
 
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
+# One grammar for collective-op matching and group parsing, shared with
+# the dry-run's inter-pod byte split (see repro.launch.hlo_census) —
+# the two censuses must never disagree about what counts as an op.
+from repro.launch.hlo_census import (COLLECTIVES, match_collective,
+                                     op_groups)
 
 
 def run_forced_device_subprocess(test_file: str, marker: str,
@@ -55,14 +57,69 @@ def collective_counts(hlo_text: str) -> dict:
     """
     counts = {c: 0 for c in COLLECTIVES}
     for line in hlo_text.splitlines():
-        s = line.strip()
-        for c in COLLECTIVES:
-            if f"{c}-done(" in s:
-                break
-            if re.search(rf"\s{c}(-start)?\(", s):
-                counts[c] += 1
-                break
+        op = match_collective(line)
+        if op is not None:
+            counts[op] += 1
     return counts
+
+
+def collective_axis_census(hlo_text: str, mesh) -> dict:
+    """Per-mesh-axis collective census of a compiled HLO module.
+
+    Returns ``{op: {axes_tuple: count}}`` where ``axes_tuple`` is the
+    (mesh-ordered) tuple of axis names whose coordinate *varies* inside
+    the op's replica groups — e.g. on the ("pod", "data", "model") mesh
+    an intra-pod all-to-all shows up as ``("data",)``, the inter-pod
+    permute as ``("pod",)`` and a global gradient all-reduce as the
+    full axis tuple.  Ops whose groups cannot be parsed (or that carry
+    no groups) are filed under ``None`` so they are never silently
+    dropped.  This is what lets tests assert not just *how many*
+    collectives the two-stage exchange emits but *which links they
+    ride* — the inter-pod hop must never widen to the combined axes.
+
+    Group parsing (explicit / iota ``replica_groups``, permute
+    ``source_target_pairs``) is shared with the dry-run's inter-pod
+    byte split via ``repro.launch.hlo_census.op_groups`` — one grammar,
+    two consumers that must agree.
+    """
+    import numpy as np
+
+    # HLO group entries are LOGICAL device numbers — positions in the
+    # flattened device assignment (mesh.devices C order) — not hardware
+    # device ids; the two coincide on forced-CPU host meshes but not on
+    # a real TPU mesh (make_mesh reorders devices for ICI topology).
+    shape = np.asarray(mesh.devices).shape
+    names = mesh.axis_names
+
+    def classify(groups):
+        varying = set()
+        for grp in groups:
+            cs = [np.unravel_index(i, shape) for i in grp]
+            for d, name in enumerate(names):
+                if len({c[d] for c in cs}) > 1:
+                    varying.add(name)
+        return tuple(a for a in names if a in varying)
+
+    census = {c: {} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        op = match_collective(line)
+        if op is not None:
+            groups = op_groups(line.strip())
+            key = classify(groups) if groups is not None else None
+            census[op][key] = census[op].get(key, 0) + 1
+    return census
+
+
+def expected_collective_permute(storage: str, pods: int,
+                                model: str = "gcn",
+                                num_layers: int = None) -> int:
+    """collective-permute count of one *multi-pod* collective PULL: the
+    inter-pod stage ships each pulled tensor through ``pods - 1``
+    shifted ppermute rounds (one permute per tensor on the 2-pod
+    production mesh); tensor count is the same per-storage/per-model
+    arithmetic as :func:`expected_all_to_all`.  Zero on a single-pod
+    mesh — the exchange collapses to the intra-pod all_to_all alone."""
+    return (pods - 1) * expected_all_to_all(storage, model, num_layers)
 
 
 def expected_all_to_all(storage: str, model: str = "gcn",

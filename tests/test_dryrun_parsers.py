@@ -50,6 +50,30 @@ def test_inter_pod_explicit_format():
     assert _groups_cross_pod(line2, 256)
 
 
+def test_inter_pod_source_target_pairs():
+    # collective-permute carries source_target_pairs, not replica_groups
+    # — the two-stage halo exchange's inter-pod hop is exactly such an
+    # op and must count toward the inter-pod byte split.
+    line = ("%cp = f32[4]{0} collective-permute(%x), "
+            "source_target_pairs={{0,256},{256,0},{1,257},{257,1}}")
+    assert _groups_cross_pod(line, 256)
+    line2 = ("%cp = f32[4]{0} collective-permute(%x), "
+             "source_target_pairs={{0,1},{1,0}}")
+    assert not _groups_cross_pod(line2, 256)
+
+
+def test_shared_group_grammar():
+    # One grammar, two consumers: the dry-run inter-pod split and the
+    # per-axis test census both read groups through hlo_census.
+    from repro.launch.hlo_census import match_collective, op_groups
+
+    line = ("%cp = f32[4]{0} collective-permute(%x), "
+            "source_target_pairs={{0,4},{4,0}}")
+    assert match_collective(line) == "collective-permute"
+    assert op_groups(line) == [[0, 4], [4, 0]]
+    assert match_collective("%d = f32[4]{0} all-reduce-done(%h)") is None
+
+
 def test_pod_split_totals():
     out = collective_bytes(HLO_SAMPLE, pod_boundary=256)
     # the 512-wide all-to-all ([2,256]<=[512] → contiguous 256-blocks: each
