@@ -6,7 +6,9 @@ O(N·L·d) array, sharded 1/M per device; pull bytes compare the ragged
 collective (Σ_m |halo(G_m)| rows per sync) against replicating the slab
 (the PR-1 snapshot layout).  Partition quality is scored by what the
 store actually pays for: edge cut, Σ_m |halo|, and |boundary| side by
-side."""
+side, plus the locality columns — worklist occupancy and the estimated
+per-layer slab bytes the chunk-skipping stream moves vs the dense
+stream (``partition_report``'s wl_* / stream_bytes_* keys)."""
 from benchmarks.common import bench_scale, emit
 from repro.core import HaloPrecision, HaloSpec
 from repro.graph import build_partitions, make_dataset, partition_report
@@ -40,6 +42,14 @@ def run() -> list[dict]:
                      "halo_rows": quality["halo_rows"],
                      "boundary": quality["boundary"],
                      "balance": round(quality["balance"], 4),
+                     # locality: streamed-kernel worklist occupancy and
+                     # estimated bytes moved (skip vs dense stream)
+                     "wl_occupancy": round(quality["wl_occupancy"], 4),
+                     "wl_visited": quality["wl_visited"],
+                     "stream_mb_skip": round(
+                         quality["stream_bytes_skip"] / 1e6, 4),
+                     "stream_mb_dense": round(
+                         quality["stream_bytes_dense"] / 1e6, 4),
                      "dense_store_mb": round(dense / 1e6, 4),
                      "compact_fp32_mb": round(spec.store_nbytes() / 1e6, 4),
                      "compact_int8_mb": round(spec8.store_nbytes() / 1e6,

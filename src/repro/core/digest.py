@@ -83,21 +83,28 @@ def gat_projected(cfg: GNNConfig) -> bool:
 
 def prepare_graph_data(g: Graph, num_parts: int, method: str = "greedy",
                        seed: int = 0, halo_weight: float = 0.0,
-                       stream_chunk_rows: int = None) -> dict:
+                       stream_chunk_rows: int = None,
+                       order: str = "none") -> dict:
     """Build the jnp data dict consumed by the epoch function.
 
     ``halo_weight`` enables the boundary-aware partitioning score (see
     :func:`repro.graph.partition.greedy_partition`); ``stream_chunk_rows``
     sets the chunk geometry of the precomputed halo worklists (defaults
-    to the kernel's ``STREAM_CHUNK_ROWS``).
+    to the kernel's ``STREAM_CHUNK_ROWS``).  ``order="rcm"`` applies the
+    locality-aware local-row reorder (``build_partitions(order=...)``),
+    guarded at the same chunk geometry the epoch streams with so the
+    worklist occupancy can only drop; the full M=1 eval view always
+    stays at ``order="none"`` — ``evaluate``/``full_graph_forward`` are
+    untouched by the knob.
     """
+    chunk_rows = (STREAM_CHUNK_ROWS if stream_chunk_rows is None
+                  else stream_chunk_rows)
     sp = build_partitions(g, num_parts, method=method, seed=seed,
-                          halo_weight=halo_weight)
+                          halo_weight=halo_weight, order=order,
+                          order_chunk_rows=chunk_rows)
     full = build_partitions(g, 1, method="random", seed=seed)
     x_global = np.concatenate(
         [g.features, np.zeros((1, g.features.shape[1]), np.float32)], axis=0)
-    chunk_rows = (STREAM_CHUNK_ROWS if stream_chunk_rows is None
-                  else stream_chunk_rows)
 
     def _struct(s: StackedPartitions) -> tuple:
         # The out-ELL in per-subgraph halo-slot space addresses the

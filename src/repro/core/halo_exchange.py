@@ -87,6 +87,19 @@ occupancy (``ChunkWorklist.occupancy``, the static kernel-selection
 signal threaded through ``GNNConfig.halo_occupancy``) sits far below 1
 and streamed bytes scale with occupied work, not slab size.
 
+Slab layout under ``build_partitions(order=...)``: every slab is laid
+out as contiguous owner runs (the slab-side mirror of the owner-sharded
+store), but the row order *within* each owner run is the partitioner's
+choice — ascending global id at ``order="none"``, first-referencing
+local row at ``order="rcm"`` (so an RCM-ordered row block's references
+land in adjacent slab chunks).  Nothing in this module depends on the
+within-run order: the :class:`PullPlan` send offsets / recv positions,
+``halo_slots`` and the worklist are all derived from the same
+``halo_ids`` table after the re-lay, pushes scatter by owner-local slot
+(store layout is order-independent), and the per-row ELL edge order is
+untouched — so pulled rows, pushed stores and aggregation outputs are
+bitwise identical across orders (tests/test_order_invariance.py).
+
 Multi-pod two-stage routing (the ("pod", "data") mesh)
 ------------------------------------------------------
 

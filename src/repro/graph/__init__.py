@@ -1,17 +1,18 @@
 from repro.graph.graph import (EllMatrix, Graph, coo_to_ell, from_edges,
                                gcn_norm_weights)
-from repro.graph.partition import (ChunkWorklist, PullPlan,
+from repro.graph.partition import (ChunkWorklist, LOCAL_ORDERS, PullPlan,
                                    StackedPartitions, build_chunk_worklist,
                                    build_partitions, edge_cut,
                                    greedy_partition, partition_report,
-                                   random_partition)
-from repro.graph.generators import (DATASETS, make_dataset, powerlaw_graph,
-                                    sbm_graph)
+                                   random_partition, reverse_cuthill_mckee)
+from repro.graph.generators import (DATASETS, community_powerlaw_graph,
+                                    make_dataset, powerlaw_graph, sbm_graph)
 
 __all__ = [
     "EllMatrix", "Graph", "coo_to_ell", "from_edges", "gcn_norm_weights",
-    "ChunkWorklist", "PullPlan", "StackedPartitions",
+    "ChunkWorklist", "LOCAL_ORDERS", "PullPlan", "StackedPartitions",
     "build_chunk_worklist", "build_partitions", "edge_cut",
-    "greedy_partition", "partition_report", "random_partition", "DATASETS",
+    "greedy_partition", "partition_report", "random_partition",
+    "reverse_cuthill_mckee", "DATASETS", "community_powerlaw_graph",
     "make_dataset", "powerlaw_graph", "sbm_graph",
 ]

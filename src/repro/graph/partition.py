@@ -5,6 +5,32 @@ multilevel-flavored greedy (LDG/Fennel-style streaming over a BFS order),
 which like METIS optimizes edge cut under balance constraints, plus random
 partitioning as the ablation baseline.
 
+Boundary-aware accounting at production scale: the ``halo_weight`` term of
+:func:`greedy_partition` charges each candidate part the *marginal new halo
+rows* an assignment creates, which needs an exact "is u already a halo row
+of part p" membership test during the stream.  That membership is kept in
+**per-node replica arrays** — for every node, the distinct parts it is
+currently replicated into, stored in one flat O(E) buffer laid out by the
+CSR degree slots (a node can only ever be a halo row of a part one of its
+neighbors was assigned to, so ``|replicas(u)| <= deg(u)`` and the total is
+bounded by 2E).  Each assignment touches only the <= deg(v) adjacent
+entries; no (num_parts, num_nodes) matrix is ever materialized, so a
+1M-node x 256-part build runs in O(E) extra memory and near-linear time.
+
+Locality-aware local row ordering: ``build_partitions(order="rcm")``
+reorders each part's local rows with reverse Cuthill-McKee over the
+induced subgraph (and re-lays each per-subgraph halo slab's owner runs by
+first-referencing row) so consecutive 128-row output blocks reference
+clustered halo-slab ranges.  That drives the static
+:class:`ChunkWorklist` occupancy down into the regime where the
+chunk-skipping streamed kernel (``halo_spmm_skip_pallas``) is selected
+and streams a fraction of the dense bytes.  The ordering is a pure
+permutation of local rows (per-row ELL edge order, the owner-sharded
+store layout and the PullPlan routing are untouched), guarded per part:
+a part keeps its identity order if RCM would not reduce its visited
+(row_block x chunk) count at the build geometry, so occupancy never
+increases.
+
 ``build_partitions`` produces a :class:`StackedPartitions`: every subgraph
 padded to identical (S, H, deg) sizes so the whole structure stacks into
 (M, ...) arrays — directly shardable over the mesh "data" axis with one
@@ -13,6 +39,7 @@ subgraph per device slice, and vmap-able on CPU.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -25,12 +52,32 @@ from repro.graph.graph import EllMatrix, Graph, coo_to_ell, gcn_norm_weights
 
 def random_partition(g: Graph, num_parts: int, seed: int = 0,
                      halo_weight: float = 0.0) -> np.ndarray:
-    # halo_weight accepted (and ignored) so every PARTITIONERS entry has
-    # the same signature under build_partitions.
+    # halo_weight accepted so every PARTITIONERS entry has the same
+    # signature under build_partitions — but random assignment has no
+    # streaming score to weight, so a sweep comparing partitioners at
+    # halo_weight > 0 would silently misreport this leg as boundary-aware.
+    if halo_weight:
+        warnings.warn(
+            f"random_partition ignores halo_weight={halo_weight!r}: the "
+            f"boundary-aware marginal-halo score only exists in the "
+            f"greedy streaming partitioner (method='greedy'/'metis')",
+            stacklevel=2)
     rng = np.random.default_rng(seed)
     assign = np.arange(g.num_nodes) % num_parts
     rng.shuffle(assign)
     return assign.astype(np.int32)
+
+
+def _ragged_take(buf: np.ndarray, starts: np.ndarray, lens: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Gather ``concatenate([buf[s:s+l] for s, l in zip(starts, lens)])``
+    plus the index of the (start, len) pair each element came from —
+    vectorized (no per-slice Python loop)."""
+    total = int(lens.sum())
+    src = np.repeat(np.arange(len(starts)), lens)
+    base = np.repeat(np.cumsum(lens) - lens, lens)
+    pos = np.repeat(starts, lens) + (np.arange(total) - base)
+    return buf[pos], src
 
 
 def greedy_partition(g: Graph, num_parts: int, seed: int = 0,
@@ -53,44 +100,65 @@ def greedy_partition(g: Graph, num_parts: int, seed: int = 0,
     percent on the test graphs at unchanged balance (edge cut drifts up
     slightly — the point is that cut is the wrong cost proxy).
 
-    Cost note: the exact tracking keeps a dense (num_parts, num_nodes)
-    bool matrix and does O(num_parts · deg(v)) penalty work per vertex —
-    fine for this offline host-side partitioner at the repo's graph
-    sizes (≲ 1e5 nodes, M ≲ 64), but a per-node replica-set/bitmap
-    variant is needed before pointing it at the 1M-node × 256-part
-    dry-run regime (see ROADMAP).
+    Cost note: halo membership is tracked in per-node **replica arrays**
+    (one flat int32 buffer laid out by the CSR degree slots — a node is
+    only ever replicated into parts its neighbors were assigned to, so
+    ``|replicas(u)| <= deg(u)`` and the whole structure is O(E)).  Each
+    step touches the <= deg(v) adjacent entries plus the candidates'
+    replica arrays (``O(sum_{u in N(v)} |replicas(u)|)``); no
+    (num_parts, num_nodes) matrix exists anywhere, so the 1M-node x
+    256-part dry-run regime builds in O(E) extra memory.  The accounting
+    is exactly the dense formulation's: ``is_halo[p, u]`` holds iff u is
+    assigned and some assigned neighbor of u lives in part ``p !=
+    assign[u]`` — the invariant the replica arrays maintain
+    incrementally (asserted against a dense reference in
+    tests/test_order_invariance.py).
     """
     n = g.num_nodes
     rng = np.random.default_rng(seed)
     capacity = slack * n / num_parts
     assign = np.full(n, -1, np.int32)
     sizes = np.zeros(num_parts, np.int64)
+    indptr, indices = g.indptr, g.indices
 
-    # BFS order from random seeds → locality in the stream.
+    # BFS order from random seeds → locality in the stream.  LIFO
+    # traversal appending unseen neighbors in CSR order — semantically
+    # the per-edge Python loop of the original implementation, run as
+    # one vectorized step per visited node (bit-identical order).
     order = np.empty(n, np.int64)
     seen = np.zeros(n, bool)
+    stack = np.empty(n, np.int64)
     pos = 0
     for root in rng.permutation(n):
         if seen[root]:
             continue
-        queue = [root]
+        stack[0] = root
+        top = 1
         seen[root] = True
-        while queue:
-            v = queue.pop()
+        while top:
+            top -= 1
+            v = stack[top]
             order[pos] = v
             pos += 1
-            for u in g.neighbors(v):
-                if not seen[u]:
-                    seen[u] = True
-                    queue.append(u)
+            ns = indices[indptr[v]:indptr[v + 1]]
+            new = ns[~seen[ns]]
+            if len(new):
+                seen[new] = True
+                stack[top:top + len(new)] = new
+                top += len(new)
     assert pos == n
 
-    # is_halo[p, u]: u is already a halo row of part p under the partial
-    # assignment — lets the halo term charge only *new* replicas.
-    is_halo = np.zeros((num_parts, n), bool) if halo_weight else None
+    if halo_weight:
+        # Per-node replica arrays: node u's current replica set (the
+        # distinct parts u is a halo row of) lives unsorted at
+        # rep_buf[indptr[u] : indptr[u] + rep_len[u]] — capacity deg(u)
+        # suffices because every entry is the part of some assigned
+        # neighbor.  O(E) total, vs the dense (num_parts, n) bool.
+        rep_buf = np.zeros(len(indices), np.int32)
+        rep_len = np.zeros(n, np.int64)
 
     for v in order:
-        nbrs = g.neighbors(v)
+        nbrs = indices[indptr[v]:indptr[v + 1]]
         counts = np.zeros(num_parts, np.float64)
         assigned = assign[nbrs]
         valid = assigned >= 0
@@ -103,14 +171,20 @@ def greedy_partition(g: Graph, num_parts: int, seed: int = 0,
             # Marginal Σ_m |halo| of assigning v to p: v becomes a halo
             # row of every other adjacent part, and each assigned
             # neighbor outside p becomes a halo row of p unless it
-            # already is one.
+            # already is one.  The dense form's per-part neighbor term
+            # (fresh & out_of_p).sum(axis=1) equals
+            #   |anbrs| − counts[p] − #{u : p ∈ replicas(u)}
+            # (replica sets never contain the node's own part), so only
+            # the candidates' replica arrays are gathered — no column
+            # scan of an (M, n) matrix.
             pen = np.full(num_parts, float(present.sum()))
             pen -= present
             if len(anbrs):
-                au = assign[anbrs]
-                fresh = ~is_halo[:, anbrs]               # (M, |anbrs|)
-                out_of_p = au[None, :] != np.arange(num_parts)[:, None]
-                pen += (fresh & out_of_p).sum(axis=1)
+                pen += len(anbrs) - counts
+                reps, _ = _ragged_take(rep_buf, indptr[anbrs],
+                                       rep_len[anbrs])
+                if len(reps):
+                    pen -= np.bincount(reps, minlength=num_parts)
             score = score - halo_weight * pen
             score[sizes >= capacity] = -np.inf
         # Tie-break toward the emptiest part for balance.
@@ -121,9 +195,100 @@ def greedy_partition(g: Graph, num_parts: int, seed: int = 0,
         if halo_weight and len(anbrs):
             au = assign[anbrs]
             other = au != best
-            is_halo[au[other], v] = True
-            is_halo[best, anbrs[other]] = True
+            if other.any():
+                # v is now a halo row of every other adjacent part …
+                mine = np.unique(au[other]).astype(np.int32)
+                s = indptr[v]
+                rep_buf[s:s + len(mine)] = mine
+                rep_len[v] = len(mine)
+                # … and each out-of-part assigned neighbor becomes a
+                # halo row of `best` unless it already is one.
+                targets = anbrs[other]
+                reps, src = _ragged_take(rep_buf, indptr[targets],
+                                         rep_len[targets])
+                has = np.zeros(len(targets), bool)
+                if len(reps):
+                    has[src[reps == best]] = True
+                fresh_t = targets[~has]
+                rep_buf[indptr[fresh_t] + rep_len[fresh_t]] = best
+                rep_len[fresh_t] += 1
     return assign
+
+
+# Chunk geometry the RCM ordering guard scores candidates at when the
+# caller does not thread its own (mirrors kernels.spmm.STREAM_CHUNK_ROWS;
+# prepare_graph_data passes the actual build knob through).
+ORDER_GUARD_CHUNK_ROWS = 512
+# Output rows per kernel row block (mirrors kernels.spmm.BLOCK_ROWS).
+ORDER_BLOCK_ROWS = 128
+
+LOCAL_ORDERS = ("none", "rcm")
+
+
+def reverse_cuthill_mckee(indptr: np.ndarray, indices: np.ndarray
+                          ) -> np.ndarray:
+    """Deterministic RCM ordering of a CSR graph; returns a permutation
+    ``perm`` such that ``perm[i]`` is the old index of new row i.
+
+    Classic Cuthill–McKee — BFS from the minimum-degree node of each
+    component (ties by lowest id), neighbors enqueued in ascending
+    (degree, id) order — reversed.  Consecutive rows of the reordered
+    matrix then share neighborhoods (small bandwidth), which is what
+    clusters the (row_block x chunk) occupancy of the streamed halo
+    kernels."""
+    n = len(indptr) - 1
+    deg = np.diff(indptr)
+    visited = np.zeros(n, bool)
+    order = np.empty(n, np.int64)
+    seeds = np.lexsort((np.arange(n), deg))   # min degree first, ties by id
+    si = 0
+    pos = 0
+    while pos < n:
+        while visited[seeds[si]]:
+            si += 1
+        root = seeds[si]
+        visited[root] = True
+        order[pos] = root
+        head, pos = pos, pos + 1
+        while head < pos:
+            v = order[head]
+            head += 1
+            ns = indices[indptr[v]:indptr[v + 1]]
+            new = ns[~visited[ns]]
+            if len(new):
+                new = new[np.lexsort((new, deg[new]))]
+                visited[new] = True
+                order[pos:pos + len(new)] = new
+                pos += len(new)
+    return order[::-1].copy()
+
+
+def _induced_csr(loc: np.ndarray, g2l: np.ndarray, indptr: np.ndarray,
+                 indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """CSR of the subgraph induced on ``loc`` (ascending global ids), in
+    local indices; ``g2l`` maps global id → local index (−1 outside)."""
+    lens = indptr[loc + 1] - indptr[loc]
+    flat, src = _ragged_take(indices, indptr[loc], lens)
+    lcols = g2l[flat]
+    keep = lcols >= 0
+    rows_l = src[keep]
+    cols_l = lcols[keep]
+    new_indptr = np.zeros(len(loc) + 1, np.int64)
+    new_indptr[1:] = np.cumsum(np.bincount(rows_l, minlength=len(loc)))
+    return new_indptr, cols_l.astype(np.int64)
+
+
+def _visited_pairs(loc_rows: np.ndarray, halo_pos: np.ndarray,
+                   n_blocks: int, n_chunks: int, chunk_rows: int) -> int:
+    """# of distinct (row_block, slab_chunk) pairs the out-edges of one
+    part occupy — exactly ``ChunkWorklist.visited_chunks`` for that part
+    at the same geometry (real references only; padding/sentinel rows
+    reference nothing)."""
+    if len(loc_rows) == 0:
+        return 0
+    blocks = np.minimum(loc_rows // ORDER_BLOCK_ROWS, n_blocks - 1)
+    key = blocks.astype(np.int64) * n_chunks + halo_pos // chunk_rows
+    return len(np.unique(key))
 
 
 def edge_cut(g: Graph, assign: np.ndarray) -> int:
@@ -168,7 +333,9 @@ def parts_per_device(num_parts: int, num_devices: int,
     return num_parts // num_devices
 
 
-def partition_report(g: Graph, sp: "StackedPartitions") -> dict:
+def partition_report(g: Graph, sp: "StackedPartitions",
+                     chunk_rows: int = ORDER_GUARD_CHUNK_ROWS,
+                     row_bytes: int = 256) -> dict:
     """Partition quality by what the compact store actually pays for.
 
     Edge cut is the classic METIS objective, but §3.3's wire cost scales
@@ -176,14 +343,31 @@ def partition_report(g: Graph, sp: "StackedPartitions") -> dict:
     with |boundary| (union of halos) — two partitions with equal cut can
     differ a lot on both.  Reported side by side so fig9 scores the real
     cost drivers.
+
+    The worklist columns score the *locality* of the layout, not just its
+    size: ``wl_occupancy`` is the stacked :class:`ChunkWorklist` fraction
+    of (row_block × chunk) pairs the streamed halo kernels must visit at
+    ``chunk_rows`` geometry (below ``SKIP_OCCUPANCY_MAX`` the skip kernel
+    is auto-selected), and ``stream_bytes_skip`` / ``stream_bytes_dense``
+    estimate the per-layer slab traffic of the skip vs dense stream
+    (visited resp. all chunks × ``chunk_rows`` slab rows × ``row_bytes``
+    per row — default 256 B = the 64-wide fp32 hidden slab).
     """
     sizes = sp.local_valid.sum(axis=1).astype(np.float64)
+    wl = sp.chunk_worklist(chunk_rows, block_rows=ORDER_BLOCK_ROWS)
+    chunk_bytes = chunk_rows * row_bytes
     return {
         "edge_cut": edge_cut(g, sp.assign),
         "halo_rows": sp.pull_rows(),              # Σ_m |halo(G_m)|
         "boundary": sp.num_boundary,              # |∪_m halo(G_m)|
         "boundary_frac": sp.boundary_fraction(),
         "balance": float(sizes.max() / max(sizes.mean(), 1.0)),
+        "order": sp.order,
+        "wl_occupancy": wl.occupancy,
+        "wl_visited": wl.visited_chunks,
+        "wl_total": wl.total_pairs,
+        "stream_bytes_skip": wl.visited_chunks * chunk_bytes,
+        "stream_bytes_dense": wl.total_pairs * chunk_bytes,
     }
 
 
@@ -363,6 +547,7 @@ class StackedPartitions:
     local_boundary: np.ndarray  # (M, S) bool valid AND boundary (served)
     out_nbr_store: np.ndarray   # (M, S, Dout) int32 → store slot or R-1
     out_nbr_global: np.ndarray  # (M, S, Dout) int32 → global id or N
+    order: str = "none"      # local-row layout knob build_partitions used
 
     @property
     def part_size(self) -> int:
@@ -432,7 +617,24 @@ class StackedPartitions:
 
 def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
                      seed: int = 0, pad_multiple: int = 8,
-                     halo_weight: float = 0.0) -> StackedPartitions:
+                     halo_weight: float = 0.0, order: str = "none",
+                     order_chunk_rows: int = None) -> StackedPartitions:
+    """Partition ``g`` into the stacked per-subgraph views.
+
+    ``order`` selects the local-row layout of every part: ``"none"``
+    keeps ascending global ids; ``"rcm"`` reorders each part's rows by
+    reverse Cuthill–McKee over its induced subgraph (and re-lays the
+    halo slab's owner runs by first-referencing row) so consecutive
+    ``ORDER_BLOCK_ROWS``-row blocks reference clustered slab chunks —
+    a pure local-row permutation that drives :class:`ChunkWorklist`
+    occupancy down (see the module docstring).  Each part keeps its
+    identity order unless RCM strictly helps at the ``order_chunk_rows``
+    guard geometry (default ``ORDER_GUARD_CHUNK_ROWS``; pass the same
+    ``chunk_rows`` the epoch streams with), so occupancy never
+    increases.
+    """
+    if order not in LOCAL_ORDERS:
+        raise ValueError(f"order={order!r} not in {LOCAL_ORDERS}")
     assign = PARTITIONERS[method](g, num_parts, seed=seed,
                                   halo_weight=halo_weight)
     n = g.num_nodes
@@ -445,23 +647,71 @@ def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
     parts_local = [np.where(assign == m)[0].astype(np.int32)
                    for m in range(num_parts)]
     # Halo = out-of-subgraph endpoints of P rows owned by the part,
-    # ordered by (owner, id): each subgraph's halo slab is then laid out
+    # ordered by (owner, ...): each subgraph's halo slab is then laid out
     # as contiguous owner runs — the slab-side mirror of the owner-
     # sharded store.  Local rows referencing few owners touch few slab
     # ranges, which is what makes the streamed kernel's (row_block ×
     # chunk) worklist sparse (gathers do no arithmetic, and the per-row
-    # ELL edge order is untouched, so results are bitwise identical to
-    # the id-sorted layout).
+    # ELL edge order is untouched, so results are bitwise identical for
+    # any slab-run layout).  Within each owner run the rows sort by id
+    # (order="none") or by first-referencing local row (order="rcm" —
+    # keeping a block's references contiguous in the slab).
+    e_part = assign[rows]
+    parts_out = []               # per-part out-edge COO (global ids)
     parts_halo = []
     for m in range(num_parts):
-        sel = assign[rows] == m
+        sel = e_part == m
         out = assign[cols[sel]] != m
-        halo = np.unique(cols[sel][out]).astype(np.int32)
-        halo = halo[np.lexsort((halo, assign[halo]))]
-        parts_halo.append(halo)
+        parts_out.append((rows[sel][out], cols[sel][out]))
+        parts_halo.append(np.unique(cols[sel][out]).astype(np.int32))
 
     S = _pad_to(max(len(p) for p in parts_local))
     H = _pad_to(max((len(h) for h in parts_halo), default=1))
+
+    chunk_rows = (ORDER_GUARD_CHUNK_ROWS if order_chunk_rows is None
+                  else order_chunk_rows)
+    n_blocks = max(-(-S // ORDER_BLOCK_ROWS), 1)
+    n_chunks = max(-(-(H + 1) // chunk_rows), 1)
+    for m in range(num_parts):
+        loc, halo = parts_local[m], parts_halo[m]
+        r_out, c_out = parts_out[m]
+        owners = assign[halo]
+        # Candidate A — identity: ascending local ids, owner runs by id.
+        halo_a = halo[np.lexsort((halo, owners))]
+        if order != "rcm" or len(loc) == 0:
+            parts_halo[m] = halo_a
+            continue
+        g2l = np.full(n, -1, np.int64)
+        g2l[loc] = np.arange(len(loc))
+        # Candidate B — RCM local rows + first-ref slab runs.
+        ip_l, ix_l = _induced_csr(loc.astype(np.int64), g2l, g.indptr,
+                                  g.indices)
+        perm = reverse_cuthill_mckee(ip_l, ix_l)
+        loc_b = loc[perm]
+        pos_b = np.full(n, -1, np.int64)
+        pos_b[loc_b] = np.arange(len(loc))
+        rows_b = pos_b[r_out]
+        hidx = np.searchsorted(halo, c_out)
+        first_ref = np.full(len(halo), S, np.int64)
+        if len(c_out):
+            np.minimum.at(first_ref, hidx, rows_b)
+        halo_b = halo[np.lexsort((halo, first_ref, owners))]
+        # Keep whichever candidate the streamed kernels visit fewer
+        # (row_block × chunk) pairs under — RCM only ever on a win, so
+        # the stacked worklist occupancy is non-increasing vs "none".
+        pos_ha = np.full(n, -1, np.int64)
+        pos_ha[halo_a] = np.arange(len(halo))
+        pos_hb = np.full(n, -1, np.int64)
+        pos_hb[halo_b] = np.arange(len(halo))
+        v_a = _visited_pairs(g2l[r_out], pos_ha[c_out], n_blocks,
+                             n_chunks, chunk_rows)
+        v_b = _visited_pairs(rows_b, pos_hb[c_out], n_blocks, n_chunks,
+                             chunk_rows)
+        if v_b <= v_a:
+            parts_local[m] = loc_b
+            parts_halo[m] = halo_b
+        else:
+            parts_halo[m] = halo_a
 
     local_ids = np.full((num_parts, S), n, np.int32)
     local_valid = np.zeros((num_parts, S), bool)
@@ -576,4 +826,5 @@ def build_partitions(g: Graph, num_parts: int, method: str = "greedy",
         sentinel_slots=sentinel_slots,
         halo_slots=halo_slots, local_slots=local_slots,
         local_boundary=local_boundary,
-        out_nbr_store=out_nbr_store, out_nbr_global=out_nbr_global)
+        out_nbr_store=out_nbr_store, out_nbr_global=out_nbr_global,
+        order=order)

@@ -149,8 +149,21 @@ def main():
                          "from); with a Pallas backend, a value at or "
                          "below the threshold selects the skip-stream "
                          "kernel in the lowered epoch")
+    ap.add_argument("--order", default=None, choices=("none", "rcm"),
+                    help="modelled local-row layout (no host partitioner "
+                         "in the abstract dry run): sets the default "
+                         "--halo-occupancy to the measured regime of "
+                         "that layout (none=0.85, rcm=0.40 — rcm lands "
+                         "below SKIP_OCCUPANCY_MAX, so a Pallas backend "
+                         "lowers the chunk-skipping stream) and is "
+                         "recorded in the JSON line")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.halo_occupancy is None and args.order is not None:
+        # Measured regimes of the two layouts on the community power-law
+        # benchmark graphs (see benchmarks/kernel_bench.py): identity
+        # order sits well above the skip threshold, RCM below it.
+        args.halo_occupancy = {"none": 0.85, "rcm": 0.40}[args.order]
 
     mesh = make_production_mesh(multi_pod=args.multi_pod, pods=args.pods)
     data_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
@@ -268,6 +281,7 @@ def main():
         "store_slots": slots, "shard_rows": slots // num_parts,
         "stream_chunk_rows": args.stream_chunk_rows,
         "halo_occupancy": args.halo_occupancy,
+        "order": args.order,
         "hlo_flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll["total"],

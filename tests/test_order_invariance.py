@@ -1,0 +1,315 @@
+"""O(E) partitioner equivalence + locality-ordering invariance.
+
+Three contracts of the PR-6 partition layer:
+
+  * the replica-array ``greedy_partition`` (O(E) memory) reproduces the
+    retired dense-``is_halo`` formulation's assignments exactly, for
+    ``halo_weight = 0`` (bit-identical score path) AND ``> 0`` (the
+    replica arrays maintain the same membership the (M, N) bool matrix
+    did) — the dense reference lives in this file, nowhere else;
+  * ``build_partitions(order="rcm")`` is a pure permutation of each
+    part's local rows: RCM output is a valid permutation, stacked
+    worklist occupancy never increases (guarded per part), and training
+    is invariant — per-row quantities (the pushed owner-sharded store,
+    keyed by global id) are **bitwise** equal across orders for
+    gcn/sage/gat, trajectories equal to tight tolerance (cross-row
+    reductions reassociate under XLA, so exact equality is only defined
+    per-row), across gather and collective pull modes;
+  * ``partition_report`` exposes the locality columns and
+    ``random_partition`` warns when its no-op ``halo_weight`` is set.
+
+The collective/multi-pod legs need >= 8 forced host devices
+(REPRO_HOST_DEVICES=8, same as tests/test_multipod.py) and skip
+elsewhere.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (TrainSettings, evaluate, init_state, make_epoch_fn,
+                        prepare_graph_data)
+from repro.graph import (build_partitions, community_powerlaw_graph,
+                         greedy_partition, make_dataset, partition_report,
+                         random_partition, reverse_cuthill_mckee, sbm_graph)
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+
+# ---------------------------------------------------------------------------
+# Dense reference for the streaming partitioner (the retired formulation)
+# ---------------------------------------------------------------------------
+
+def _dense_greedy(g, num_parts, seed=0, slack=1.05, halo_weight=0.0):
+    """The pre-PR-6 greedy_partition: identical score, but halo
+    membership in a dense (num_parts, num_nodes) bool matrix."""
+    n = g.num_nodes
+    rng = np.random.default_rng(seed)
+    capacity = slack * n / num_parts
+    assign = np.full(n, -1, np.int32)
+    sizes = np.zeros(num_parts, np.int64)
+
+    order = np.empty(n, np.int64)
+    seen = np.zeros(n, bool)
+    pos = 0
+    for root in rng.permutation(n):
+        if seen[root]:
+            continue
+        queue = [root]
+        seen[root] = True
+        while queue:
+            v = queue.pop()
+            order[pos] = v
+            pos += 1
+            for u in g.neighbors(v):
+                if not seen[u]:
+                    seen[u] = True
+                    queue.append(u)
+    assert pos == n
+
+    is_halo = np.zeros((num_parts, n), bool) if halo_weight else None
+    for v in order:
+        nbrs = g.neighbors(v)
+        counts = np.zeros(num_parts, np.float64)
+        assigned = assign[nbrs]
+        valid = assigned >= 0
+        anbrs = nbrs[valid]
+        if valid.any():
+            np.add.at(counts, assigned[valid], 1.0)
+        score = counts * (1.0 - sizes / capacity)
+        if halo_weight:
+            present = counts > 0
+            pen = np.full(num_parts, float(present.sum()))
+            pen -= present
+            if len(anbrs):
+                au = assign[anbrs]
+                fresh = ~is_halo[:, anbrs]
+                out_of_p = au[None, :] != np.arange(num_parts)[:, None]
+                pen += (fresh & out_of_p).sum(axis=1)
+            score = score - halo_weight * pen
+            score[sizes >= capacity] = -np.inf
+        score += 1e-9 * (capacity - sizes)
+        best = int(np.argmax(score))
+        assign[v] = best
+        sizes[best] += 1
+        if halo_weight and len(anbrs):
+            au = assign[anbrs]
+            other = au != best
+            is_halo[au[other], v] = True
+            is_halo[best, anbrs[other]] = True
+    return assign
+
+
+@pytest.mark.parametrize("halo_weight", [0.0, 0.1, 0.25, 0.5])
+def test_streaming_greedy_matches_dense_reference(halo_weight):
+    for g, M in [(make_dataset("flickr-sim", scale=0.25), 4),
+                 (sbm_graph(600, num_classes=6, seed=3), 6),
+                 (community_powerlaw_graph(800, num_comm=8, seed=2), 4)]:
+        want = _dense_greedy(g, M, halo_weight=halo_weight)
+        got = greedy_partition(g, M, halo_weight=halo_weight)
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{g.name} hw={halo_weight}")
+
+
+def test_streaming_greedy_no_dense_matrix(monkeypatch):
+    """The O(E) path must never allocate an array with a num_parts×n
+    (or larger) bool/row footprint — the point of the rewrite.  Guarded
+    by intercepting np.zeros, the only constructor the dense matrix ever
+    used."""
+    g = make_dataset("flickr-sim", scale=0.25)
+    M = 16
+    limit = M * g.num_nodes
+    real_zeros = np.zeros
+
+    def checked_zeros(shape, *a, **k):
+        size = int(np.prod(shape)) if np.ndim(shape) else int(shape)
+        assert size < limit, f"dense-scale allocation {shape}"
+        return real_zeros(shape, *a, **k)
+
+    monkeypatch.setattr(np, "zeros", checked_zeros)
+    assign = greedy_partition(g, M, halo_weight=0.25)
+    assert len(np.unique(assign)) == M
+
+
+# ---------------------------------------------------------------------------
+# RCM ordering: valid permutation, occupancy never increases
+# ---------------------------------------------------------------------------
+
+def test_rcm_is_valid_permutation():
+    g = sbm_graph(400, num_classes=4, seed=0)
+    perm = reverse_cuthill_mckee(g.indptr, g.indices)
+    assert len(perm) == g.num_nodes
+    assert np.array_equal(np.sort(perm), np.arange(g.num_nodes))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(80, 400), classes=st.integers(2, 8),
+       parts=st.sampled_from([2, 4, 8]), seed=st.integers(0, 5),
+       chunk_rows=st.sampled_from([64, 128, 512]))
+def test_rcm_never_increases_occupancy(n, classes, parts, seed,
+                                       chunk_rows):
+    g = sbm_graph(n, num_classes=classes, avg_degree=8.0, seed=seed)
+    a = build_partitions(g, parts, halo_weight=0.25, order="none",
+                         order_chunk_rows=chunk_rows)
+    b = build_partitions(g, parts, halo_weight=0.25, order="rcm",
+                         order_chunk_rows=chunk_rows)
+    # Pure permutation of the local rows, per part.
+    np.testing.assert_array_equal(a.assign, b.assign)
+    for m in range(parts):
+        np.testing.assert_array_equal(
+            np.sort(a.local_ids[m][a.local_valid[m]]),
+            np.sort(b.local_ids[m][b.local_valid[m]]))
+        np.testing.assert_array_equal(
+            np.sort(a.halo_ids[m][a.halo_valid[m]]),
+            np.sort(b.halo_ids[m][b.halo_valid[m]]))
+    occ_a = a.chunk_worklist(chunk_rows).occupancy
+    occ_b = b.chunk_worklist(chunk_rows).occupancy
+    assert occ_b <= occ_a + 1e-12
+    assert b.order == "rcm" and a.order == "none"
+
+
+def test_rcm_reduces_occupancy_on_community_graph():
+    """On a community-structured graph the ordering must actually WIN,
+    not just not-lose — this is the crossover the kernel selection
+    rides (benchmarks/kernel_bench.py records it on the full-size
+    graph)."""
+    g = community_powerlaw_graph(8000, num_comm=80, seed=0)
+    a = build_partitions(g, 8, halo_weight=0.25, order="none",
+                         order_chunk_rows=256)
+    b = build_partitions(g, 8, halo_weight=0.25, order="rcm",
+                         order_chunk_rows=256)
+    occ_a = a.chunk_worklist(256).occupancy
+    occ_b = b.chunk_worklist(256).occupancy
+    assert occ_b < occ_a, (occ_a, occ_b)
+
+
+def test_build_partitions_rejects_unknown_order():
+    g = sbm_graph(200, seed=0)
+    with pytest.raises(ValueError, match="order"):
+        build_partitions(g, 2, order="sorted")
+
+
+# ---------------------------------------------------------------------------
+# Training invariance across order= none / rcm
+# ---------------------------------------------------------------------------
+
+def _train(g, order, model, pull_mode="gather", mesh=None, parts=4,
+           epochs=2):
+    data = prepare_graph_data(g, parts, halo_weight=0.25, order=order)
+    cfg = GNNConfig(model=model, num_layers=3, in_dim=g.features.shape[1],
+                    hidden_dim=32, num_classes=int(g.labels.max()) + 1)
+    opt = adam(5e-3)
+    settings_ = TrainSettings(sync_interval=2, mode="digest",
+                              pull_mode=pull_mode)
+    state = init_state(cfg, opt, data)
+    fn = jax.jit(make_epoch_fn(cfg, opt, settings_, mesh=mesh))
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+    metrics = None
+    for _ in range(epochs):
+        state, metrics = fn(state, tdata)
+    ev = evaluate(cfg, state["params"], tdata)
+    return {"store": np.asarray(state["store"]["data"]),
+            "loss": float(metrics["loss"]),
+            "val_f1": float(ev["val_f1"]),
+            "sp": data["_sp"]}
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "gat"])
+def test_order_invariant_training_gather(model):
+    g = community_powerlaw_graph(2000, num_comm=20, seed=1)
+    a = _train(g, "none", model)
+    b = _train(g, "rcm", model)
+    # The pushed owner-sharded store is keyed by global id (slot =
+    # owner·shard_rows + rank), per-row, sentinels re-zeroed — bitwise
+    # equal across layouts with NO un-permutation needed; this is the
+    # strongest per-row trajectory pin XLA admits (cross-row reductions
+    # such as the loss mean reassociate under a row permutation).
+    np.testing.assert_array_equal(a["store"], b["store"])
+    # evaluate() runs the order-independent full (M=1) view: bitwise.
+    assert a["val_f1"] == b["val_f1"]
+    tol = 1e-6 if model == "gat" else 1e-5
+    assert abs(a["loss"] - b["loss"]) <= tol
+
+
+def test_order_invariant_rows_unpermute():
+    """Per-part local ids are the same set across orders and the stored
+    per-id labels/masks follow the permutation — un-permuting by global
+    id recovers identical per-node tables."""
+    g = community_powerlaw_graph(1500, num_comm=15, seed=4)
+    a = build_partitions(g, 4, halo_weight=0.25, order="none")
+    b = build_partitions(g, 4, halo_weight=0.25, order="rcm")
+    for m in range(4):
+        ia = a.local_ids[m][a.local_valid[m]]
+        ib = b.local_ids[m][b.local_valid[m]]
+        inv_a, inv_b = np.argsort(ia), np.argsort(ib)
+        np.testing.assert_array_equal(ia[inv_a], ib[inv_b])
+        np.testing.assert_array_equal(
+            a.labels[m][a.local_valid[m]][inv_a],
+            b.labels[m][b.local_valid[m]][inv_b])
+        np.testing.assert_array_equal(
+            a.train_mask[m][a.local_valid[m]][inv_a],
+            b.train_mask[m][b.local_valid[m]][inv_b])
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs REPRO_HOST_DEVICES=8 forced devices")
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_order_invariant_training_collective(model):
+    from repro.launch.mesh import make_host_mesh
+
+    g = community_powerlaw_graph(2000, num_comm=20, seed=1)
+    mesh = make_host_mesh(data=8)
+    a = _train(g, "none", model, pull_mode="collective", mesh=mesh,
+               parts=8)
+    b = _train(g, "rcm", model, pull_mode="collective", mesh=mesh,
+               parts=8)
+    np.testing.assert_array_equal(a["store"], b["store"])
+    assert a["val_f1"] == b["val_f1"]
+    assert abs(a["loss"] - b["loss"]) <= 1e-5
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs REPRO_HOST_DEVICES=8 forced devices")
+def test_order_invariant_training_multipod():
+    from repro.launch.mesh import make_host_mesh
+
+    g = community_powerlaw_graph(2000, num_comm=20, seed=1)
+    mesh = make_host_mesh(pod=2, data=4, model=1)
+    a = _train(g, "none", "gcn", pull_mode="collective", mesh=mesh,
+               parts=8)
+    b = _train(g, "rcm", "gcn", pull_mode="collective", mesh=mesh,
+               parts=8)
+    np.testing.assert_array_equal(a["store"], b["store"])
+    assert a["val_f1"] == b["val_f1"]
+    assert abs(a["loss"] - b["loss"]) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Satellites: report columns, random_partition warning
+# ---------------------------------------------------------------------------
+
+def test_partition_report_locality_columns():
+    g = make_dataset("flickr-sim", scale=0.25)
+    sp = build_partitions(g, 4, order="rcm")
+    rep = partition_report(g, sp, chunk_rows=128, row_bytes=100)
+    for k in ("wl_occupancy", "wl_visited", "wl_total",
+              "stream_bytes_skip", "stream_bytes_dense", "order"):
+        assert k in rep, k
+    assert rep["order"] == "rcm"
+    assert 0.0 < rep["wl_occupancy"] <= 1.0
+    assert rep["wl_visited"] <= rep["wl_total"]
+    assert rep["stream_bytes_skip"] == rep["wl_visited"] * 128 * 100
+    assert rep["stream_bytes_dense"] == rep["wl_total"] * 128 * 100
+    assert (rep["stream_bytes_skip"] / rep["stream_bytes_dense"]
+            == pytest.approx(rep["wl_occupancy"]))
+
+
+def test_random_partition_warns_on_halo_weight():
+    g = sbm_graph(200, seed=0)
+    with pytest.warns(UserWarning, match="ignores halo_weight"):
+        random_partition(g, 4, halo_weight=0.25)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        random_partition(g, 4, halo_weight=0.0)   # no warning at 0
