@@ -7,12 +7,12 @@ stale-KV long-context mode.
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_arch
+from repro.launch.serving_driver import run_serve_loop
 from repro.models.transformer import (arch_specs, decode_step, forward,
                                       init_cache)
 from repro.nn import init_params
@@ -41,26 +41,32 @@ def main():
     cache = init_cache(cfg, args.batch, max_seq, long=args.long)
     step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t,
                                                long=args.long))
-    t0 = time.perf_counter()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, prompts[:, t:t + 1])
-    t_prefill = time.perf_counter() - t0
+    def prefill_step(carry, tok):
+        cache, _ = carry
+        logits, cache = step(params, cache, tok)
+        return (cache, logits), None
 
-    generated = []
-    t0 = time.perf_counter()
-    for _ in range(args.gen):
+    carry, _, prefill = run_serve_loop(
+        prefill_step, [prompts[:, t:t + 1] for t in range(args.prompt_len)],
+        carry=(cache, None), items_per_call=args.batch)
+
+    def gen_step(carry, _):
+        cache, logits = carry
         nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        generated.append(nxt)
         logits, cache = step(params, cache, nxt)
-    t_gen = time.perf_counter() - t0
+        return (cache, logits), nxt
+
+    carry, generated, gen = run_serve_loop(gen_step, range(args.gen),
+                                           carry=carry,
+                                           items_per_call=args.batch)
     out = jnp.concatenate(generated, axis=1)
 
     mode = "stale-KV (DIGEST)" if args.long else "full KV cache"
     print(f"arch={cfg.name} (reduced)  mode={mode}")
     print(f"prefill {args.prompt_len} toks x{args.batch}: "
-          f"{t_prefill:.2f}s; decode {args.gen} toks: "
-          f"{t_gen/args.gen*1e3:.1f} ms/tok")
+          f"{prefill.total_s:.2f}s; decode {args.gen} toks: "
+          f"{gen.total_s/args.gen*1e3:.1f} ms/tok "
+          f"(p50 {gen.p50_ms:.1f} / p99 {gen.p99_ms:.1f} ms)")
     print(f"sample continuation ids: {out[0, :16].tolist()}")
 
 

@@ -11,6 +11,10 @@ from repro.core.comm_model import (CommConstants, epoch_comm_bytes,
                                    epoch_time_model, khop_halo_sizes)
 from repro.core import halo_exchange
 from repro.core.halo_exchange import HaloPrecision, HaloSpec
+from repro.core import serving
+from repro.core.serving import (ServeConfig, ServePlan, build_serve_plan,
+                                init_serve_store, make_refresh_fn,
+                                serve_query, serve_query_sharded)
 from repro.core import stale_store
 
 __all__ = [
@@ -23,4 +27,7 @@ __all__ = [
     "CommConstants",
     "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes",
     "halo_exchange", "HaloPrecision", "HaloSpec", "stale_store",
+    "serving", "ServeConfig", "ServePlan", "build_serve_plan",
+    "init_serve_store", "make_refresh_fn", "serve_query",
+    "serve_query_sharded",
 ]

@@ -261,6 +261,23 @@ def make_subgraph_loss(cfg: GNNConfig):
     return loss_fn
 
 
+def empty_halo_struct(cfg: GNNConfig, struct: dict, rows: int = 8
+                      ) -> tuple[list, dict]:
+    """Per-layer all-zero halo tables + a struct whose out-ELL is remapped
+    into them — the "no out-of-subgraph information" view a single-
+    subgraph forward needs when every ``out_nbr`` entry is a sentinel
+    (the M=1 full-graph view, and the serving per-part top layer when
+    the halo side is supplied separately).  The zero tables contribute
+    exact ±0.0 terms, so consumers stay bitwise-comparable with paths
+    that drop the halo side entirely."""
+    tables = [jnp.zeros((rows, cfg.in_dim), jnp.float32)]
+    tables += [jnp.zeros((rows, cfg.hidden_dim), jnp.float32)
+               for _ in range(cfg.num_layers - 1)]
+    struct = dict(struct)
+    struct["out_nbr"] = jnp.minimum(struct["out_nbr"], rows)
+    return tables, struct
+
+
 def full_graph_forward(cfg: GNNConfig, params: Pytree, data: dict
                        ) -> jax.Array:
     """Exact (no staleness, no partition) forward; returns (N_pad, classes)."""
@@ -268,15 +285,27 @@ def full_graph_forward(cfg: GNNConfig, params: Pytree, data: dict
     # Halo is empty in the M=1 view: all out_nbr are sentinels. Supply
     # small correctly-shaped zero tables and remap sentinels into them.
     struct = {k: v[0] for k, v in data["full_struct"].items()}
-    H = 8
-    tables = [jnp.zeros((H, cfg.in_dim), jnp.float32)]
-    tables += [jnp.zeros((H, cfg.hidden_dim), jnp.float32)
-               for _ in range(cfg.num_layers - 1)]
-    # Remap sentinel halo ids to the small dummy table's sentinel.
-    struct = dict(struct)
-    struct["out_nbr"] = jnp.minimum(struct["out_nbr"], H)
+    tables, struct = empty_halo_struct(cfg, struct)
     logits, reps = gnn_forward(cfg, params, x, tables, struct)
     return logits, reps
+
+
+def top_layer_reps(cfg: GNNConfig, params: Pytree, data: dict) -> jax.Array:
+    """h^(L-1) for every node — the exact full-graph input rows of the
+    top GNN layer, in the full view's global-id row order (N_pad, hidden).
+
+    This is what a serving-store refresh pushes (``repro.core.serving``):
+    the store then answers any node's prediction by gathering these rows
+    and running only layer L-1.  It is byte-for-byte ``reps[-1]`` of
+    :func:`full_graph_forward` — the same tensor the training epoch
+    PUSHes for layer L-2 — so serving parity against ``evaluate()`` is
+    exact rather than approximate."""
+    if cfg.num_layers < 2:
+        raise ValueError("serving from stored representations needs "
+                         "num_layers >= 2 (a 1-layer GNN reads raw "
+                         "features; there is no (L-1)-layer row to store)")
+    _, reps = full_graph_forward(cfg, params, data)
+    return reps[-1]
 
 
 # ---------------------------------------------------------------------------

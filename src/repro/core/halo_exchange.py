@@ -146,6 +146,35 @@ shardings and npz checkpoints unchanged:
 where ``R = M · shard_rows``.  Sentinel rows (one per shard; the global
 sentinel is the last row of the last shard) are re-zeroed after every
 push, so pulls of padded halo slots are exactly zero.
+
+Read-path / refresh contract (serving)
+--------------------------------------
+
+``repro.core.serving`` builds an online query engine on this module, so
+the store API doubles as a serving contract:
+
+  * **Reads are layout-pure.**  :func:`collective_pull` /
+    :func:`pull_slab` / :func:`layer_table` depend only on the pytree
+    shapes above — any leading layer count works (serving uses a
+    single-layer all-node slab whose ``shard_rows`` is the padded part
+    size + 1), and ``owner = slot // shard_rows`` is the one invariant
+    routing relies on.  Extra pytree keys (serving adds an int32
+    ``"version"`` scalar) must be stripped before calling in
+    (``serving.store_bare``): the exchange paths iterate exactly
+    {"data"[, "scale"]}, and :func:`precision_of` keys off ``"scale"``.
+  * **Writes go through push, and every refresh is a version bump.**
+    :func:`push` / :func:`shard_push` are total-row overwrites of the
+    pushed slots (quantize + scatter + sentinel re-zero) — there is no
+    partial-row state, so a reader that observed slot s either sees the
+    old row or the new row, never a blend.  Serving relies on this plus
+    one rule of its own: any refresh that could change a served value
+    (new representations OR new top-layer weights) must bump the store
+    version, because the hot-row cache invalidates by version equality,
+    never by scanning rows.
+  * **Donation is safe.**  Push scatters are in-place updates of the
+    store operand, so jitting a refresh with ``donate_argnums`` on the
+    store reuses its buffers — a serving deployment holds one
+    store-sized allocation across refreshes (``serving.make_refresh_fn``).
 """
 from __future__ import annotations
 

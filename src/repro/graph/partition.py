@@ -472,6 +472,41 @@ def build_chunk_worklist(nbr: np.ndarray, n_slab_rows: int,
 # Stacked per-subgraph views
 # ---------------------------------------------------------------------------
 
+def build_pull_plan(halo_slots: np.ndarray, halo_valid: np.ndarray,
+                    halo_size: int, shard_rows: int) -> "PullPlan":
+    """Ragged per-(owner, requester) collective-pull routing over ANY
+    owner-sharded slot layout (see :class:`PullPlan`).
+
+    The only layout facts the plan depends on are that slots are grouped
+    in M contiguous shards of ``shard_rows`` rows (owner = slot //
+    shard_rows) with the owner's zero sentinel at the shard's last row —
+    so the same builder routes both the training store (boundary rows
+    only, ``StackedPartitions.pull_plan``) and the all-node serving
+    store (``repro.core.serving.build_serve_plan``), which lay slots out
+    differently but share the shard/sentinel convention.
+
+    halo_slots: (M, H) slot of each halo entry (any value where invalid);
+    halo_valid: (M, H) bool; padding pairs route owner-sentinel rows into
+    the slab's sentinel position ``halo_size``.
+    """
+    M = halo_slots.shape[0]
+    sr = shard_rows
+    owner_of = halo_slots // sr                       # (M, H)
+    counts = np.zeros((M, M), np.int64)
+    for m in range(M):
+        np.add.at(counts[m], owner_of[m][halo_valid[m]], 1)
+    K = max(int(counts.max()), 1)
+    send_off = np.full((M, M, K), sr - 1, np.int32)
+    recv_pos = np.full((M, M, K), halo_size, np.int32)
+    for m in range(M):                                # requester
+        for j in range(M):                            # owner
+            sel = np.where(halo_valid[m] & (owner_of[m] == j))[0]
+            send_off[j, m, :len(sel)] = halo_slots[m, sel] - j * sr
+            recv_pos[m, j, :len(sel)] = sel
+    return PullPlan(max_rows=K, send_offsets=send_off,
+                    recv_positions=recv_pos)
+
+
 @dataclasses.dataclass
 class PullPlan:
     """Ragged per-(owner, requester) routing of the collective halo pull.
@@ -597,22 +632,8 @@ class StackedPartitions:
 
     def pull_plan(self) -> PullPlan:
         """Ragged collective-pull routing (see :class:`PullPlan`)."""
-        M, sr = self.num_parts, self.shard_rows
-        owner_of = self.halo_slots // sr                  # (M, H)
-        counts = np.zeros((M, M), np.int64)
-        for m in range(M):
-            np.add.at(counts[m], owner_of[m][self.halo_valid[m]], 1)
-        K = max(int(counts.max()), 1)
-        send_off = np.full((M, M, K), sr - 1, np.int32)
-        recv_pos = np.full((M, M, K), self.halo_size, np.int32)
-        for m in range(M):                                # requester
-            for j in range(M):                            # owner
-                sel = np.where(self.halo_valid[m] & (owner_of[m] == j))[0]
-                send_off[j, m, :len(sel)] = (
-                    self.halo_slots[m, sel] - j * sr)
-                recv_pos[m, j, :len(sel)] = sel
-        return PullPlan(max_rows=K, send_offsets=send_off,
-                        recv_positions=recv_pos)
+        return build_pull_plan(self.halo_slots, self.halo_valid,
+                               self.halo_size, self.shard_rows)
 
 
 def build_partitions(g: Graph, num_parts: int, method: str = "greedy",

@@ -83,6 +83,25 @@ def spmm(nbr: jax.Array, wts: jax.Array, table: jax.Array,
     return out[:rows, :feat]
 
 
+@jax.jit
+def halo_gather(nbr: jax.Array, data: jax.Array,
+                scale: jax.Array = None) -> jax.Array:
+    """Gather + dequantize individual slab rows: out[..., :] =
+    dequant(data[nbr[...]]).
+
+    The non-reducing read primitive of the serving query path: GAT's
+    attention needs every neighbor row individually (scores before the
+    weighted sum), and the hot-row cache's miss fill wants raw rows —
+    neither can ride :func:`halo_spmm`, whose contraction is fused.
+    gcn/sage reductions should keep using :func:`halo_spmm` so they hit
+    the resident/stream/skip selection ladder.
+    """
+    rows = jnp.take(data, nbr, axis=0).astype(jnp.float32)
+    if scale is not None:
+        rows = rows * jnp.take(scale, nbr, axis=0)
+    return rows
+
+
 @functools.partial(jax.jit,
                    static_argnames=("backend", "resident_max_bytes",
                                     "chunk_rows", "occupancy",

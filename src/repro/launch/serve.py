@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +16,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch, get_smoke_arch
 from repro.distributed.sharding import axis_rules
 from repro.launch.mesh import make_host_mesh
+from repro.launch.serving_driver import run_serve_loop
 from repro.models.transformer import (arch_specs, init_cache,
                                       precompute_vision_cache)
 from repro.nn import init_params
@@ -48,13 +48,19 @@ def main():
         serve = jax.jit(make_serve_step(cfg, long=args.long))
         toks = jax.random.randint(jax.random.PRNGKey(1),
                                   (args.batch, 1), 0, cfg.vocab_size)
-        t0 = time.perf_counter()
-        for i in range(args.gen):
+
+        def step_fn(carry, _):
+            cache, toks = carry
             logits, cache = serve(params, cache, toks)
-            toks = jnp.argmax(logits[:, -1:], axis=-1)
-        dt = (time.perf_counter() - t0) / args.gen
+            return (cache, jnp.argmax(logits[:, -1:], axis=-1)), None
+
+        _, _, stats = run_serve_loop(step_fn, range(args.gen),
+                                     carry=(cache, toks), warmup=1,
+                                     items_per_call=args.batch)
         print(f"arch={cfg.name} long={args.long} batch={args.batch}: "
-              f"{dt*1e3:.1f} ms/token on {jax.default_backend()}")
+              f"{stats.total_s/args.gen*1e3:.1f} ms/token "
+              f"(steady p50 {stats.p50_ms:.1f} / p99 {stats.p99_ms:.1f} ms)"
+              f" on {jax.default_backend()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,94 @@
+"""Shared serving-loop driver: batching, warmup, latency capture.
+
+Every serving entry point in the repo — the LM decode loops
+(``examples/serve_lm.py``, ``repro.launch.serve``) and the GNN
+embedding-serving path (``examples/serve_gnn.py``,
+``repro.launch.serve_gnn``, ``benchmarks/serve_bench.py``) — is the same
+shape: thread a carry (KV cache / hot-row cache) through a jitted step
+over a stream of work items, blocking on each result so wall-clock
+actually measures the step, and summarize the latency distribution.
+This module is that loop, written once.
+
+``step_fn(carry, item) -> (carry, out)`` is the only contract; the
+driver owns timing (``jax.block_until_ready`` on everything the step
+returns — without it XLA's async dispatch would attribute a step's cost
+to whoever blocks next) and the stats: p50/p99 latency over the
+steady-state calls (the first ``warmup`` calls — compile + cache-warm —
+are excluded) and items/sec throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Latency capture of one serving loop."""
+
+    latencies_s: list           # per-call wall-clock seconds, in order
+    warmup: int = 0             # leading calls excluded from percentiles
+    items_per_call: int = 1     # batch size, for the throughput number
+
+    @property
+    def steady(self) -> list:
+        tail = self.latencies_s[self.warmup:]
+        return tail if tail else self.latencies_s
+
+    @property
+    def total_s(self) -> float:
+        return float(sum(self.latencies_s))
+
+    def percentile_ms(self, q: float) -> float:
+        return float(np.percentile(np.asarray(self.steady), q) * 1e3)
+
+    @property
+    def p50_ms(self) -> float:
+        return self.percentile_ms(50)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.percentile_ms(99)
+
+    @property
+    def mean_ms(self) -> float:
+        return float(np.mean(np.asarray(self.steady)) * 1e3)
+
+    @property
+    def per_sec(self) -> float:
+        """Steady-state items (queries / tokens) per second."""
+        denom = max(float(sum(self.steady)), 1e-12)
+        return self.items_per_call * len(self.steady) / denom
+
+    def summary(self) -> dict:
+        return {"calls": len(self.latencies_s), "warmup": self.warmup,
+                "items_per_call": self.items_per_call,
+                "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
+                "mean_ms": self.mean_ms, "per_sec": self.per_sec}
+
+
+def run_serve_loop(step_fn: Callable[[Any, Any], tuple],
+                   items: Iterable, carry: Any = None, warmup: int = 0,
+                   items_per_call: int = 1,
+                   ) -> tuple[Any, list, ServeStats]:
+    """Drive ``step_fn`` over ``items``, timing every call.
+
+    step_fn(carry, item) -> (carry, out); each call is blocked on before
+    the clock stops.  Returns (final carry, [out per call], ServeStats);
+    the first ``warmup`` calls stay in the latency list but are excluded
+    from the percentile/throughput stats.
+    """
+    latencies, outs = [], []
+    for item in items:
+        t0 = time.perf_counter()
+        carry, out = step_fn(carry, item)
+        jax.block_until_ready((carry, out))
+        latencies.append(time.perf_counter() - t0)
+        outs.append(out)
+    warmup = min(warmup, max(len(latencies) - 1, 0))
+    return carry, outs, ServeStats(latencies, warmup=warmup,
+                                   items_per_call=items_per_call)

@@ -274,6 +274,20 @@ def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
 _LAYERS = {"gcn": _gcn_layer, "sage": _sage_layer, "gat": _gat_layer}
 
 
+def gnn_layer(cfg: GNNConfig, layer_params: Pytree, x_local: jax.Array,
+              x_halo, struct: dict) -> jax.Array:
+    """Run ONE split-aggregation layer — the public single-layer entry.
+
+    ``layer_params`` is one ``params[f"layer_{ell}"]`` subtree; the rest
+    of the contract matches the per-layer step inside
+    :func:`gnn_forward` (x_halo is a plain table or a halo ref).  The
+    serving path (``repro.core.serving``) uses this to run just the top
+    layer over rows read back from the owner-sharded store, instead of
+    replaying the whole forward.
+    """
+    return _LAYERS[cfg.model](cfg, layer_params, x_local, x_halo, struct)
+
+
 # ---------------------------------------------------------------------------
 # Full forward (single subgraph)
 # ---------------------------------------------------------------------------

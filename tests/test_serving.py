@@ -1,0 +1,383 @@
+"""Online embedding-serving path: parity, cache semantics, collectives.
+
+The load-bearing invariants:
+
+  * served logits == the offline ``full_graph_forward`` on a frozen
+    store — **bitwise** for gcn/sage (the query engine computes the same
+    fused ELL sum over the same fp32 rows), ≤ 1e-6 for gat (attention
+    softmax reassociation);
+  * no stale cache hit survives a store refresh — the version bump
+    invalidates every cached row at once;
+  * the compiled SPMD query contains **zero all-gathers** — out-of-shard
+    rows move only through the serving PullPlan's ragged all_to_all
+    (one per store tensor, so two for int8's data+scale);
+  * ServeConfig is a static jit-cache key: a new config retraces, a
+    reused one never does.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import hlo_utils
+from repro.core import serving
+from repro.core.digest import (full_graph_forward, prepare_graph_data,
+                               top_layer_reps)
+from repro.graph import make_dataset
+from repro.launch.serving_driver import ServeStats, run_serve_loop
+from repro.models.gnn import GNNConfig, gnn_specs
+from repro.nn import init_params
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(parts: int = 4):
+    g = make_dataset("flickr-sim", scale=0.1, seed=2)
+    data = prepare_graph_data(g, parts, seed=0)
+    plan = serving.build_serve_plan(data)
+    return g, data, plan
+
+
+@functools.lru_cache(maxsize=None)
+def _model(model: str, parts: int = 4, key: int = 0):
+    g, data, plan = _setup(parts)
+    cfg = GNNConfig(model=model, num_layers=2, in_dim=g.features.shape[1],
+                    hidden_dim=32, num_classes=int(g.labels.max()) + 1)
+    params = init_params(jax.random.PRNGKey(key), gnn_specs(cfg))
+    return cfg, params
+
+
+def _fresh_store(plan, cfg, params, data,
+                 precision=None) -> dict:
+    store = serving.init_serve_store(
+        plan, cfg.hidden_dim,
+        precision or serving.ServeConfig().precision)
+    refresh = serving.make_refresh_fn()
+    return refresh(store, top_layer_reps(cfg, params, data),
+                   plan.refresh_data())
+
+
+def _serve_all(cfg, scfg, params, store, cache, qdata, num_nodes):
+    """Serve every node id in batches; returns (stacked logits, cache)."""
+    outs = []
+    b = scfg.batch_size
+    for lo in range(0, num_nodes, b):
+        q = np.full(b, num_nodes, np.int32)
+        ids = np.arange(lo, min(lo + b, num_nodes), dtype=np.int32)
+        q[:len(ids)] = ids
+        logits, cache = serving.serve_query(cfg, scfg, params, store,
+                                            cache, qdata, jnp.asarray(q))
+        outs.append(np.asarray(logits)[:len(ids)])
+    return np.concatenate(outs), cache
+
+
+# ---------------------------------------------------------------------------
+# Parity vs the offline full-graph forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_served_logits_bitwise(model):
+    g, data, plan = _setup()
+    cfg, params = _model(model)
+    ref = np.asarray(full_graph_forward(cfg, params, data)[0])[:g.num_nodes]
+    store = _fresh_store(plan, cfg, params, data)
+    scfg = serving.ServeConfig(batch_size=64, cache_rows=128)
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    served, cache = _serve_all(cfg, scfg, params, store, cache,
+                               plan.query_data(), g.num_nodes)
+    np.testing.assert_array_equal(served, ref)
+    # Second sweep: hits serve the memoized row — still bitwise.
+    served2, cache = _serve_all(cfg, scfg, params, store, cache,
+                                plan.query_data(), g.num_nodes)
+    np.testing.assert_array_equal(served2, ref)
+    assert int(cache["hits"]) > 0
+
+
+def test_served_logits_gat_tolerance():
+    g, data, plan = _setup()
+    cfg, params = _model("gat")
+    ref = np.asarray(full_graph_forward(cfg, params, data)[0])[:g.num_nodes]
+    store = _fresh_store(plan, cfg, params, data)
+    scfg = serving.ServeConfig(batch_size=64)
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    served, _ = _serve_all(cfg, scfg, params, store, cache,
+                           plan.query_data(), g.num_nodes)
+    assert np.abs(served - ref).max() <= 1e-6
+
+
+def test_padding_queries_excluded_from_counters():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    store = _fresh_store(plan, cfg, params, data)
+    scfg = serving.ServeConfig(batch_size=32, cache_rows=128)
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    q = np.full(32, g.num_nodes, np.int32)   # all padding
+    q[:5] = np.arange(5)
+    _, cache = serving.serve_query(cfg, scfg, params, store, cache,
+                                   plan.query_data(), jnp.asarray(q))
+    assert int(cache["hits"]) + int(cache["misses"]) == 5
+
+
+# ---------------------------------------------------------------------------
+# Hot-row cache semantics
+# ---------------------------------------------------------------------------
+
+def test_cache_counters_and_full_hit_second_pass():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    store = _fresh_store(plan, cfg, params, data)
+    b = 32
+    # sets == batch and distinct lines per query -> every miss fills.
+    scfg = serving.ServeConfig(batch_size=b, cache_rows=4 * b)
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    slots = np.asarray(plan.serve_map[:g.num_nodes])
+    lines = {}
+    ids = [i for i in range(g.num_nodes)
+           if lines.setdefault(slots[i] % scfg.cache_sets, i) == i][:b]
+    q = jnp.asarray(np.asarray(ids, np.int32))
+    out1, cache = serving.serve_query(cfg, scfg, params, store, cache,
+                                      plan.query_data(), q)
+    assert (int(cache["hits"]), int(cache["misses"])) == (0, b)
+    out2, cache = serving.serve_query(cfg, scfg, params, store, cache,
+                                      plan.query_data(), q)
+    assert (int(cache["hits"]), int(cache["misses"])) == (b, b)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert serving.hit_rate(cache) == pytest.approx(0.5)
+
+
+def test_no_stale_hit_survives_refresh():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    _, params2 = _model("gcn", key=7)
+    scfg = serving.ServeConfig(batch_size=64, cache_rows=512)
+    store = _fresh_store(plan, cfg, params, data)
+    refresh = serving.make_refresh_fn()
+    qdata, rdata = plan.query_data(), plan.refresh_data()
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    # Warm the cache hard on the old weights.
+    for _ in range(3):
+        _, cache = _serve_all(cfg, scfg, params, store, cache, qdata,
+                              g.num_nodes)
+    assert int(cache["hits"]) > 0
+    # Deploy: new reps, one refresh, one version bump.
+    store = refresh(store, top_layer_reps(cfg, params2, data), rdata)
+    hits_before = int(cache["hits"])
+    served, cache = _serve_all(cfg, scfg, params2, store, cache, qdata,
+                               g.num_nodes)
+    # Every row the warm cache held is invalid: zero post-refresh hits...
+    assert int(cache["hits"]) == hits_before
+    # ...and the served logits are the NEW model's, bitwise.
+    ref2 = np.asarray(full_graph_forward(cfg, params2, data)[0])
+    np.testing.assert_array_equal(served, ref2[:g.num_nodes])
+
+
+def test_cache_disabled_still_counts_misses():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    store = _fresh_store(plan, cfg, params, data)
+    scfg = serving.ServeConfig(batch_size=64, cache_rows=0)
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    served, cache = _serve_all(cfg, scfg, params, store, cache,
+                               plan.query_data(), g.num_nodes)
+    assert int(cache["hits"]) == 0
+    assert int(cache["misses"]) == g.num_nodes
+    ref = np.asarray(full_graph_forward(cfg, params, data)[0])
+    np.testing.assert_array_equal(served, ref[:g.num_nodes])
+
+
+def test_refresh_bumps_version_every_time():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    store = serving.init_serve_store(plan, cfg.hidden_dim)
+    refresh = serving.make_refresh_fn()
+    reps = top_layer_reps(cfg, params, data)
+    assert int(store["version"]) == 0
+    store = refresh(store, reps, plan.refresh_data())
+    store = refresh(store, reps, plan.refresh_data())
+    assert int(store["version"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Jit-cache keying (static ServeConfig)
+# ---------------------------------------------------------------------------
+
+def test_serve_config_is_static_jit_key():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    store = _fresh_store(plan, cfg, params, data)
+    qdata = plan.query_data()
+
+    def run(scfg):
+        cache = serving.init_cache(scfg, cfg.num_classes)
+        q = jnp.zeros((scfg.batch_size,), jnp.int32)
+        serving.serve_query(cfg, scfg, params, store, cache, qdata, q)
+
+    run(serving.ServeConfig(batch_size=16, cache_rows=64))
+    n0 = serving.serve_query._cache_size()
+    # Same knobs, fresh (equal) config object: no retrace.
+    run(serving.ServeConfig(batch_size=16, cache_rows=64))
+    assert serving.serve_query._cache_size() == n0
+    # Any knob change is a new executable — sweeps can't alias traces.
+    run(serving.ServeConfig(batch_size=16, cache_rows=128))
+    assert serving.serve_query._cache_size() == n0 + 1
+    run(serving.ServeConfig(batch_size=16, cache_rows=128, cache_ways=8))
+    assert serving.serve_query._cache_size() == n0 + 2
+
+
+def test_batch_size_is_contract_not_bound():
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    store = _fresh_store(plan, cfg, params, data)
+    scfg = serving.ServeConfig(batch_size=16)
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    with pytest.raises(ValueError, match="batch"):
+        serving.serve_query(cfg, scfg, params, store, cache,
+                            plan.query_data(), jnp.zeros((8,), jnp.int32))
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        serving.ServeConfig(cache_rows=6, cache_ways=4)
+    with pytest.raises(ValueError):
+        serving.ServeConfig(storage="fp64")
+
+
+# ---------------------------------------------------------------------------
+# Plan invariants
+# ---------------------------------------------------------------------------
+
+def test_serve_plan_layout():
+    g, data, plan = _setup()
+    sp = data["_sp"]
+    n = g.num_nodes
+    # Every node gets exactly one slot, owned by its assigned part.
+    slots = plan.serve_map[:n]
+    assert len(np.unique(slots)) == n
+    np.testing.assert_array_equal(slots // plan.serve_rows,
+                                  np.asarray(sp.assign))
+    # Sentinels: global id n -> last row; per-shard sentinel rows are
+    # never a node's slot.
+    assert plan.serve_map[n] == plan.store_rows - 1
+    assert not np.isin(plan.sentinel_slots, slots).any()
+    assert plan.nbr.shape[0] == n + 1
+    assert (plan.nbr[n] == n).all() and (plan.wts[n] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Serving-loop driver
+# ---------------------------------------------------------------------------
+
+def test_run_serve_loop_stats():
+    def step(carry, item):
+        return carry + item, item * 2
+
+    carry, outs, stats = run_serve_loop(step, [1, 2, 3, 4], carry=0,
+                                        warmup=1, items_per_call=8)
+    assert carry == 10 and outs == [2, 4, 6, 8]
+    assert len(stats.latencies_s) == 4 and len(stats.steady) == 3
+    assert stats.p50_ms <= stats.p99_ms
+    assert stats.per_sec > 0
+    summary = stats.summary()
+    assert summary["items_per_call"] == 8 and summary["calls"] == 4
+
+
+def test_serve_stats_warmup_clamped():
+    stats = ServeStats([0.5], warmup=5)
+    assert stats.steady == [0.5]          # never empty
+
+
+def test_zipf_queries_shape_and_skew():
+    q1 = serving.zipf_queries(1000, 64, 10, skew=1.1, seed=3)
+    q1b = serving.zipf_queries(1000, 64, 10, skew=1.1, seed=3)
+    np.testing.assert_array_equal(q1, q1b)
+    assert q1.shape == (10, 64) and q1.min() >= 0 and q1.max() < 1000
+    q2 = serving.zipf_queries(1000, 64, 10, skew=1.8, seed=3)
+    # Heavier skew concentrates more of the stream on the head.
+    assert (q2 < 10).mean() > (q1 < 10).mean()
+    hot = np.arange(1000)[::-1].astype(np.int32)
+    q3 = serving.zipf_queries(1000, 64, 10, skew=1.8, seed=3, hot_ids=hot)
+    assert (q3 >= 990).mean() == (q2 < 10).mean()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: collective census + SPMD parity + sharded refresh
+# ---------------------------------------------------------------------------
+
+def _multi_device_checks():
+    from repro.launch.mesh import make_host_mesh
+
+    assert jax.device_count() >= 8, jax.device_count()
+    g, data, plan = _setup(parts=8)
+    mesh = make_host_mesh(data=8)
+    sdata = plan.sharded_data(data)
+    M, S = plan.local_ids.shape
+
+    for model, storage, n_tensors in (("gcn", "fp32", 1),
+                                      ("sage", "int8", 2)):
+        cfg, params = _model(model, parts=8)
+        scfg = serving.ServeConfig(batch_size=16, storage=storage)
+        store = serving.init_serve_store(plan, cfg.hidden_dim,
+                                         scfg.precision)
+        reps = top_layer_reps(cfg, params, data)
+        # Sharded refresh (shard-local scatter) == the SPMD fallback.
+        store_sh, sdata_sh, q_sh = serving.serve_shardings(store, sdata,
+                                                           mesh)
+        sharded = serving.make_refresh_fn(mesh, plan.serve_rows,
+                                          donate=False)(
+            jax.device_put(store, store_sh), reps, plan.refresh_data())
+        store = serving.make_refresh_fn(donate=False)(
+            store, reps, plan.refresh_data())
+        for k in store:
+            np.testing.assert_array_equal(np.asarray(sharded[k]),
+                                          np.asarray(store[k]))
+
+        store_p = jax.device_put(store, store_sh)
+        sdata_p = jax.tree.map(jax.device_put, sdata, sdata_sh)
+        q_rows = np.full((M, scfg.batch_size), S, np.int32)
+        for m in range(M):
+            v = np.where(plan.local_valid[m])[0][:scfg.batch_size]
+            q_rows[m, :len(v)] = v
+        qp = jax.device_put(jnp.asarray(q_rows), q_sh)
+
+        hlo = serving.serve_query_sharded.lower(
+            cfg, scfg, mesh, plan.halo_size, params, store_p, sdata_p,
+            qp).compile().as_text()
+        counts = hlo_utils.collective_counts(hlo)
+        # The whole query program moves cross-shard rows through exactly
+        # the ragged serving pull — one all_to_all per store tensor.
+        assert counts["all-gather"] == 0, counts
+        assert counts["reduce-scatter"] == 0, counts
+        assert counts["collective-permute"] == 0, counts
+        assert counts["all-to-all"] == n_tensors, counts
+        census = hlo_utils.collective_axis_census(hlo, mesh)
+        assert set(census.get("all-to-all", {})) == {("data",)}, census
+
+        out = np.asarray(serving.serve_query_sharded(
+            cfg, scfg, mesh, plan.halo_size, params, store_p, sdata_p,
+            qp))
+        ref = np.asarray(full_graph_forward(cfg, params, data)[0])
+        tol = 2e-6 if storage == "fp32" else 5e-3
+        for m in range(M):
+            v = np.where(plan.local_valid[m])[0][:scfg.batch_size]
+            gids = plan.local_ids[m][v]
+            assert np.abs(out[m, :len(v)] - ref[gids]).max() <= tol
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI serving-smoke job)")
+def test_serving_multidevice_inprocess():
+    _multi_device_checks()
+
+
+def test_serving_multidevice_subprocess():
+    """Force an 8-device CPU platform in a subprocess so the serving
+    collective census runs even on single-device hosts."""
+    if jax.device_count() >= 8:
+        pytest.skip("covered by the in-process variant")
+    hlo_utils.run_forced_device_subprocess(__file__, "SERVING_OK")
+
+
+if __name__ == "__main__":
+    _multi_device_checks()
+    print("SERVING_OK")
