@@ -1,0 +1,78 @@
+"""Sampled-training variance probe: control variates vs plain neighbor
+sampling at EQUAL fanout.
+
+From one warmed state (a few exact full-coverage steps populate the
+stale store and the local history), draw K fanout-bounded batches and
+run one SGD step per draw under each estimator.  Two error measures
+against the exact full-coverage step from the same state:
+
+  * ``grad_mse``  — MSE of the updated parameters (SGD: update = -lr·g,
+    so this is lr²·the gradient estimator's MSE);
+  * ``act_mse``   — MSE of the estimated hidden-layer activations (the
+    step's ``hist`` refresh) against the exact activations.
+
+The CV rows must come out strictly below the plain rows — the VR-GCN
+variance-reduction claim, realized on the DIGEST stale store.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_scale, emit
+from benchmarks.gnn_common import setup
+from repro.core import TrainSettings, make_sampled_epoch_fn, sampled_train
+from repro.graph import build_sampler
+from repro.optim import sgd
+
+
+def _settings(estimator: str) -> TrainSettings:
+    return TrainSettings(sync_interval=2, mode="digest",
+                         pull_mode="gather", sample_estimator=estimator)
+
+
+def run() -> list[dict]:
+    scale = bench_scale()
+    _, data, cfg = setup("flickr-sim", scale=0.15 * scale)
+    opt = sgd(0.1)
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+
+    probe = build_sampler(data, fanout=1, batch_seeds=1 << 30)
+    full = build_sampler(data, fanout=max(probe.max_in_degree, 1),
+                         batch_seeds=1 << 30)
+    state, _ = sampled_train(cfg, opt, data, full, _settings("cv"),
+                             steps=6, eval_every=6)
+
+    steps = {e: jax.jit(make_sampled_epoch_fn(cfg, opt, _settings(e)))
+             for e in ("cv", "plain")}
+    ref_batch = {k: jnp.asarray(v) for k, v in full.full_batch().items()}
+    ref, _ = steps["cv"](state, tdata, ref_batch)
+    ref_params = jax.tree.leaves(ref["params"])
+
+    draws = max(int(8 * scale), 4)
+    rows = []
+    for fanout in (2, 4):
+        sampler = build_sampler(data, fanout=fanout,
+                                batch_seeds=1 << 30, seed=11)
+        for est, step in steps.items():
+            gmse = amse = 0.0
+            for t in range(draws):
+                batch = {k: jnp.asarray(v)
+                         for k, v in sampler.sample(t).items()}
+                s, _ = step(state, tdata, batch)
+                gmse += float(sum(
+                    jnp.mean((a - b) ** 2)
+                    for a, b in zip(jax.tree.leaves(s["params"]),
+                                    ref_params)))
+                amse += float(jnp.mean((s["hist"] - ref["hist"]) ** 2))
+            rows.append({
+                "name": f"sampling/fanout={fanout}/{est}",
+                "grad_mse": f"{gmse / draws:.3e}",
+                "act_mse": f"{amse / draws:.3e}",
+                "draws": draws,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

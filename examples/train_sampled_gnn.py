@@ -1,0 +1,40 @@
+#!/usr/bin/env python
+"""Mini-batch sampled DIGEST training with stale-store control variates.
+
+Each step samples a seed batch plus a fanout-bounded neighborhood per
+subgraph; sampled neighbors aggregate fresh, the complement reads the
+stale HaloExchange store / local history as a VR-GCN control-variate
+baseline — so a fanout-3 step costs a fraction of the full epoch yet its
+gradient stays anchored to the full-batch one.  Compare against plain
+scaled neighbor sampling at the same fanout to see the baseline working.
+
+  PYTHONPATH=src python examples/train_sampled_gnn.py
+"""
+from repro.core import TrainSettings, prepare_graph_data, sampled_train
+from repro.graph import build_sampler, make_dataset
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+
+def main():
+    g = make_dataset("flickr-sim", scale=0.3)
+    data = prepare_graph_data(g, 4)
+    cfg = GNNConfig(model="gcn", num_layers=3,
+                    in_dim=g.features.shape[1], hidden_dim=64,
+                    num_classes=int(g.labels.max()) + 1)
+    sampler = build_sampler(data, fanout=3, batch_seeds=256, seed=0)
+    print(f"sampler: fanout=3 (max in-degree {sampler.max_in_degree}), "
+          f"256 seeds/subgraph/step")
+
+    for estimator in ("cv", "plain"):
+        settings = TrainSettings(sync_interval=5, mode="digest",
+                                 sample_estimator=estimator)
+        _, hist = sampled_train(cfg, adam(5e-3), data, sampler, settings,
+                                steps=120, eval_every=30)
+        tail = ", ".join(f"step {e}: {f1:.4f}"
+                         for e, f1 in zip(hist["epoch"], hist["val_f1"]))
+        print(f"[{estimator:5s}] val F1 — {tail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,12 @@
 from repro.core.digest import (MODES, TrainSettings,
                                check_collective_geometry, digest_train,
                                evaluate, full_graph_forward, gat_projected,
-                               init_state, make_epoch_fn,
-                               prepare_graph_data, project_store_tables)
+                               init_sampled_state, init_state,
+                               make_epoch_fn, make_sampled_epoch_fn,
+                               prepare_graph_data, project_store_tables,
+                               sampled_train)
 from repro.core.async_engine import (AsyncSettings, digest_a_train,
-                                     sync_time_per_round)
+                                     store_geometry, sync_time_per_round)
 from repro.core.error_bound import measure_error_and_bound, quantization_eps
 from repro.core.comm_model import (CommConstants, epoch_comm_bytes,
                                    epoch_time_model, khop_halo_sizes)
@@ -22,7 +24,8 @@ __all__ = [
     "digest_train", "evaluate",
     "full_graph_forward", "gat_projected", "init_state", "make_epoch_fn",
     "prepare_graph_data", "project_store_tables",
-    "AsyncSettings", "digest_a_train",
+    "init_sampled_state", "make_sampled_epoch_fn", "sampled_train",
+    "AsyncSettings", "digest_a_train", "store_geometry",
     "sync_time_per_round", "measure_error_and_bound", "quantization_eps",
     "CommConstants",
     "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes",

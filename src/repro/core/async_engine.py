@@ -42,6 +42,40 @@ class AsyncSettings:
     straggler_delay: tuple[float, float] = (8.0, 10.0)  # paper §5.2
     precision: halo_exchange.HaloPrecision = halo_exchange.HaloPrecision()
     seed: int = 0
+    # Round-0 push of every worker's initial representations.  The pull
+    # and push cadences are offset (pull at r % N == 0, push at
+    # (r-1) % N == 0), so without the warm start a fast worker's first
+    # pull at r = N can read never-pushed all-zero rows from a shard
+    # whose owner (e.g. the straggler) has not finished round 1 yet —
+    # silently aggregating zeros.  False reproduces the cold-store
+    # behavior (the regression test's positive control).
+    warm_start: bool = True
+
+
+def store_geometry(data: dict) -> tuple[int, int]:
+    """(num_slots, shard_rows) of the owner-sharded store for a prepared
+    data dict — audited against the per-shard sentinel layout.
+
+    The store has R = M·shard_rows rows, slot = owner·shard_rows + rank,
+    with each shard's last row its zero sentinel
+    (``sentinel_slots[m] = (m+1)·shard_rows − 1``); ``init_store`` takes
+    ``num_slots = R − 1`` and appends the global sentinel as row R−1 —
+    which *is* shard M−1's sentinel, so the async simulator's store is
+    byte-compatible with the SPMD epoch's (:func:`repro.core.digest.
+    init_state`), a property pinned by tests/test_async_engine.py.
+    Raises if the data dict's slot views do not satisfy the layout."""
+    total_rows = int(data["store_ids"].shape[0])
+    num_parts = int(data["local_slots"].shape[0])
+    sentinels = np.asarray(data["sentinel_slots"])
+    shard_rows = int(sentinels[0]) + 1
+    expect = (np.arange(num_parts) + 1) * shard_rows - 1
+    if (total_rows != num_parts * shard_rows
+            or not np.array_equal(sentinels, expect)):
+        raise ValueError(
+            f"owner-sharded store layout violated: {total_rows} rows, "
+            f"{num_parts} parts, sentinel_slots={sentinels.tolist()} "
+            f"(want (m+1)*shard_rows-1 with shard_rows={shard_rows})")
+    return total_rows - 1, shard_rows
 
 
 def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
@@ -52,6 +86,12 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
     history["sim_time"] is the simulated wall clock — the paper's Figure 7
     x-axis — under which async should dominate sync when a straggler exists.
+    At each eval tick, ``loss`` is the mean of every worker's most recent
+    round loss (not whichever worker happened to land on the tick) and
+    ``delay`` the *max* staleness across workers; ``round_loss`` /
+    ``round_worker`` log every completed round, and ``cold_rows`` the
+    running count of all-zero (never-pushed) valid halo rows consumed by
+    pulls — 0 under the default warm start.
     """
     check_worklist_geometry(cfg, data)
     rng = np.random.default_rng(settings.seed)
@@ -61,7 +101,7 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
     opt_state = opt.init(params)
-    num_slots = int(data["store_ids"].shape[0]) - 1
+    num_slots, shard_rows = store_geometry(data)
     store = halo_exchange.init_store(L1, num_slots, cfg.hidden_dim,
                                      settings.precision)
     halo_cache = [jnp.zeros((L1, H, cfg.hidden_dim), jnp.float32)
@@ -91,10 +131,8 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     # Owner-sharded store: each worker's push is a dynamic-update-slice
     # of exactly its own shard (owner_push) — the write region is bounded
     # by construction instead of relying on the partitioner to keep a
-    # whole-slab scatter shard-local.
-    shard_rows = (int(data["store_ids"].shape[0])
-                  // int(data["local_ids"].shape[0]))
-
+    # whole-slab scatter shard-local.  shard_rows comes from the audited
+    # store_geometry above (slot = owner·shard_rows + rank).
     @jax.jit
     def push_rows(store, owner, slots, valid, reps):
         return halo_exchange.owner_push(store, owner, slots, valid, reps,
@@ -114,6 +152,27 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     x_local_all = np.asarray(data["x_global"])[np.asarray(data["local_ids"])]
     x_halo_all = np.asarray(data["x_global"])[np.asarray(data["halo_ids"])]
 
+    if settings.warm_start and cfg.num_layers > 1:
+        # Round-0 PUSH: seed every shard with the representations at the
+        # initial parameters before any worker runs — the same bits each
+        # worker's own round-1 push will write (round 1 trains against
+        # the initial snapshot), so no pull can ever read a never-pushed
+        # all-zero row, straggler or not.
+        for m in range(M):
+            struct_m = {k: v[m] for k, v in data["struct"].items()}
+            _, _, push0 = worker_grad(
+                params, jnp.asarray(x_local_all[m]),
+                jnp.asarray(x_halo_all[m]), halo_cache[m], struct_m,
+                data["labels"][m], data["train_mask"][m])
+            owner = jnp.asarray(m, jnp.int32)
+            if settings.precision.error_feedback:
+                store, push_residual[m] = push_rows_ef(
+                    store, owner, data["local_slots"][m],
+                    data["local_valid"][m], push0, push_residual[m])
+            else:
+                store = push_rows(store, owner, data["local_slots"][m],
+                                  data["local_valid"][m], push0)
+
     # Per-worker speed model.
     speeds = np.exp(rng.normal(0, settings.worker_speed_jitter, size=M))
 
@@ -129,10 +188,18 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     worker_round = np.zeros(M, np.int64)
     step = jnp.asarray(0, jnp.int32)
     hist = {"round": [], "sim_time": [], "loss": [], "val_f1": [],
-            "test_f1": [], "delay": []}
+            "test_f1": [], "delay": [], "round_worker": [],
+            "round_loss": [], "cold_rows": []}
     snapshot_step = np.zeros(M, np.int64)   # server step when params fetched
     params_snapshots: list = [params] * M
     rounds_done = 0
+    # Per-worker trackers backing the eval-tick aggregates: each tick
+    # logs the MEAN of every worker's latest round loss and the MAX
+    # staleness — a tick used to sample whichever single worker happened
+    # to finish last, i.e. per-worker noise, not training state.
+    last_loss = np.full(M, np.nan)
+    last_delay = np.zeros(M, np.int64)
+    cold_rows = 0   # all-zero valid halo rows consumed by pulls (probe)
 
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
 
@@ -144,8 +211,16 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         # Periodic PULL from the shared compact store (non-blocking read;
         # dequantized into this worker's private fp32 table).
         if r % settings.sync_interval == 0:
-            halo_cache[m] = halo_exchange.pull(
+            pulled = halo_exchange.pull(
                 store, data["halo_slots"][m][None])[0]
+            # Cold-store probe: a valid halo row that is all-zero across
+            # every layer was never pushed (legitimately-pushed rows are
+            # post-relu representations of a real forward — an exactly
+            # all-zero one is measure-zero).  Stays 0 under warm_start.
+            zero_rows = ((jnp.abs(pulled).max(axis=(0, 2)) == 0)
+                         & data["halo_valid"][m])
+            cold_rows += int(zero_rows.sum())
+            halo_cache[m] = pulled
 
         struct_m = {k: v[m] for k, v in data["struct"].items()}
         loss, grads, push = worker_grad(
@@ -154,6 +229,10 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
             data["labels"][m], data["train_mask"][m])
 
         delay = int(step) - int(snapshot_step[m])
+        last_loss[m] = float(loss)
+        last_delay[m] = delay
+        hist["round_worker"].append(m)
+        hist["round_loss"].append(float(loss))
         # Server applies immediately (async, non-blocking).
         params, opt_state = apply_update(params, opt_state, grads, step)
         step = step + 1
@@ -178,12 +257,14 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         if rounds_done % eval_every_rounds == 0 or \
                 rounds_done == total_rounds:
             ev = evaluate(cfg, params, tdata)
+            seen = ~np.isnan(last_loss)
             hist["round"].append(rounds_done)
             hist["sim_time"].append(float(now))
-            hist["loss"].append(float(loss))
+            hist["loss"].append(float(last_loss[seen].mean()))
             hist["val_f1"].append(float(ev["val_f1"]))
             hist["test_f1"].append(float(ev["test_f1"]))
-            hist["delay"].append(delay)
+            hist["delay"].append(int(last_delay.max()))
+            hist["cold_rows"].append(cold_rows)
 
     state = {"params": params, "opt_state": opt_state, "store": store,
              "step": step}

@@ -57,8 +57,8 @@ from repro.core.halo_exchange import HaloPrecision
 from repro.graph.graph import Graph
 from repro.graph.partition import StackedPartitions, build_partitions
 from repro.kernels.spmm import BLOCK_ROWS, STREAM_CHUNK_ROWS
-from repro.models.gnn import (GNNConfig, gnn_forward, gnn_specs, halo_ref,
-                              projected_halo_ref)
+from repro.models.gnn import (GNNConfig, gnn_forward, gnn_forward_sampled,
+                              gnn_specs, halo_ref, projected_halo_ref)
 from repro.nn import init_params, micro_f1, softmax_cross_entropy
 from repro.optim import Optimizer
 
@@ -334,6 +334,109 @@ class TrainSettings:
     llcg_correction: bool = False
     correction_frac: float = 0.1
     correction_lr: float = 1e-3
+    # Mini-batch sampled regime (make_sampled_epoch_fn): "cv" aggregates
+    # unsampled neighbors from the stale history (VR-GCN control
+    # variates); "plain" drops the history term — classic scaled neighbor
+    # sampling, the variance-benchmark baseline.
+    sample_estimator: str = "cv"
+
+
+def _digest_pull(cfg: GNNConfig, settings: TrainSettings, state: dict,
+                 data: dict, mesh, r) -> dict:
+    """Algorithm-1 PULL (line 5): gather each subgraph's halo slots from
+    the owner shards into the device-local cache slab every
+    ``sync_interval`` epochs.  ONE implementation shared by the
+    full-batch epoch and the sampled step — both therefore compile to
+    the identical collective routing (the ragged all_to_all census the
+    HLO tests pin is a property of this function, not of the caller)."""
+    halo_size = data["halo_ids"].shape[1]
+    do_pull = (r % settings.sync_interval == 0)
+    if settings.pull_on_first_epoch:
+        do_pull = do_pull | (r == 1)
+    if settings.pull_mode == "collective":
+        def _pull_store(zs):
+            return halo_exchange.collective_pull(
+                zs, data["pull_send"], data["pull_recv"],
+                halo_size, mesh)
+    else:
+        def _pull_store(zs):
+            return halo_exchange.pull_slab(zs, data["halo_slots"])
+    if gat_projected(cfg):
+        def _pull():
+            # Owner-shard projection (once per layer) + the same
+            # ragged routing, one exchange per z tensor.
+            new_cache = {}
+            for key, zs in project_store_tables(
+                    state["store"], state["params"], cfg,
+                    settings.precision).items():
+                slab = _pull_store(zs)
+                new_cache[key] = slab["data"]
+                if "scale" in slab:
+                    new_cache[f"{key}_scale"] = slab["scale"]
+            return new_cache
+    else:
+        def _pull():
+            return _pull_store(state["store"])
+    return jax.lax.cond(do_pull, _pull, lambda: state["cache"])
+
+
+def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
+                 data: dict, push_reps, mesh, r) -> tuple:
+    """Periodic PUSH (Algorithm 1 lines 9–10; epochs r = 1, N+1, 2N+1,
+    ...) + the Theorem-1 staleness probe; shared by the full-batch epoch
+    and the sampled step.  Owner-sharded scatter: every row of part m
+    lands in shard m.  Collective mode routes it through the explicit
+    shard-local forms (shard_push / shard_staleness_error) so the
+    compiled epoch carries ZERO cross-device push traffic — the SPMD
+    scatter/gather fallback is the partitioner-dependent path (same
+    math, but XLA cannot prove writes stay in-shard and materializes
+    collectives around them).  Returns (store, push_residual, eps)."""
+    new_store = state["store"]
+    new_residual = state.get("push_residual")
+    eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
+    if settings.mode == "digest" and cfg.num_layers > 1:
+        do_push = ((r - 1) % settings.sync_interval == 0)
+        num_parts = data["local_slots"].shape[0]
+        shard_rows = state["store"]["data"].shape[1] // num_parts
+        if settings.pull_mode == "collective":
+            eps = halo_exchange.shard_staleness_error(
+                state["store"], push_reps, data["local_slots"],
+                data["local_boundary"], shard_rows, mesh)
+
+            def _push():
+                return halo_exchange.shard_push(
+                    state["store"], data["local_slots"],
+                    data["local_valid"], push_reps, shard_rows, mesh)
+
+            def _push_ef():
+                return halo_exchange.shard_push_ef(
+                    state["store"], data["local_slots"],
+                    data["local_valid"], push_reps,
+                    state["push_residual"], shard_rows, mesh)
+        else:
+            eps = halo_exchange.staleness_error(
+                state["store"], push_reps, data["local_slots"],
+                data["local_boundary"])
+
+            def _push():
+                return halo_exchange.push(
+                    state["store"], data["local_slots"],
+                    data["local_valid"], push_reps,
+                    data["sentinel_slots"])
+
+            def _push_ef():
+                return halo_exchange.push_ef(
+                    state["store"], data["local_slots"],
+                    data["local_valid"], push_reps,
+                    state["push_residual"], data["sentinel_slots"])
+        if settings.precision.error_feedback:
+            new_store, new_residual = jax.lax.cond(
+                do_push, _push_ef,
+                lambda: (state["store"], state["push_residual"]))
+        else:
+            new_store = jax.lax.cond(do_push, _push,
+                                     lambda: state["store"])
+    return new_store, new_residual, eps
 
 
 def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
@@ -406,36 +509,7 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                 cache = ({"data": q} if sc is None
                          else {"data": q, "scale": sc})
         elif settings.mode == "digest":
-            do_pull = (r % settings.sync_interval == 0)
-            if settings.pull_on_first_epoch:
-                do_pull = do_pull | (r == 1)
-            # PULL = collective gather of each subgraph's halo slots from
-            # the owner shards (Algorithm 1 line 5).
-            if settings.pull_mode == "collective":
-                def _pull_store(zs):
-                    return halo_exchange.collective_pull(
-                        zs, data["pull_send"], data["pull_recv"],
-                        halo_size, mesh)
-            else:
-                def _pull_store(zs):
-                    return halo_exchange.pull_slab(zs, data["halo_slots"])
-            if use_projected:
-                def _pull():
-                    # Owner-shard projection (once per layer) + the same
-                    # ragged routing, one exchange per z tensor.
-                    new_cache = {}
-                    for key, zs in project_store_tables(
-                            state["store"], state["params"], cfg,
-                            settings.precision).items():
-                        slab = _pull_store(zs)
-                        new_cache[key] = slab["data"]
-                        if "scale" in slab:
-                            new_cache[f"{key}_scale"] = slab["scale"]
-                    return new_cache
-            else:
-                def _pull():
-                    return _pull_store(state["store"])
-            cache = jax.lax.cond(do_pull, _pull, lambda: state["cache"])
+            cache = _digest_pull(cfg, settings, state, data, mesh, r)
         else:
             cache = state["cache"]
 
@@ -497,59 +571,8 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                 lambda p, g: p - settings.correction_lr * g, params,
                 corr_grads)
 
-        # Periodic PUSH (lines 9–10): epochs r = 1, N+1, 2N+1, ...
-        # Owner-sharded scatter: every row of part m lands in shard m.
-        # Collective mode routes it through the explicit shard-local
-        # forms (shard_push / shard_staleness_error) so the compiled
-        # epoch carries ZERO cross-device push traffic — the SPMD
-        # scatter/gather below are the partitioner-dependent fallback
-        # (same math, but XLA cannot prove writes stay in-shard and
-        # materializes collectives around them).
-        new_store = state["store"]
-        new_residual = state.get("push_residual")
-        eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
-        if settings.mode == "digest" and cfg.num_layers > 1:
-            do_push = ((r - 1) % settings.sync_interval == 0)
-            num_parts = data["local_slots"].shape[0]
-            shard_rows = state["store"]["data"].shape[1] // num_parts
-            if settings.pull_mode == "collective":
-                eps = halo_exchange.shard_staleness_error(
-                    state["store"], push_reps, data["local_slots"],
-                    data["local_boundary"], shard_rows, mesh)
-
-                def _push():
-                    return halo_exchange.shard_push(
-                        state["store"], data["local_slots"],
-                        data["local_valid"], push_reps, shard_rows, mesh)
-
-                def _push_ef():
-                    return halo_exchange.shard_push_ef(
-                        state["store"], data["local_slots"],
-                        data["local_valid"], push_reps,
-                        state["push_residual"], shard_rows, mesh)
-            else:
-                eps = halo_exchange.staleness_error(
-                    state["store"], push_reps, data["local_slots"],
-                    data["local_boundary"])
-
-                def _push():
-                    return halo_exchange.push(
-                        state["store"], data["local_slots"],
-                        data["local_valid"], push_reps,
-                        data["sentinel_slots"])
-
-                def _push_ef():
-                    return halo_exchange.push_ef(
-                        state["store"], data["local_slots"],
-                        data["local_valid"], push_reps,
-                        state["push_residual"], data["sentinel_slots"])
-            if settings.precision.error_feedback:
-                new_store, new_residual = jax.lax.cond(
-                    do_push, _push_ef,
-                    lambda: (state["store"], state["push_residual"]))
-            else:
-                new_store = jax.lax.cond(do_push, _push,
-                                         lambda: state["store"])
+        new_store, new_residual, eps = _digest_push(
+            cfg, settings, state, data, push_reps, mesh, r)
 
         train_acc = micro_f1(logits, data["labels"],
                              data["train_mask"].astype(jnp.float32))
@@ -659,5 +682,170 @@ def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
             if verbose:
                 print(f"[{settings.mode}] epoch {e+1:4d} "
                       f"loss {float(m['loss']):.4f} "
+                      f"val_f1 {float(ev['val_f1']):.4f}")
+    return state, hist
+
+
+# ---------------------------------------------------------------------------
+# Mini-batch sampled training (stale-store control variates)
+# ---------------------------------------------------------------------------
+
+def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
+                          settings: TrainSettings, mesh=None) -> Callable:
+    """Build the jitted sampled step ``(state, data, batch) -> (state,
+    metrics)`` — the mini-batch regime over the SAME stale store.
+
+    ``batch`` is one :class:`repro.graph.sampler.NeighborSampler` draw
+    (``seed_mask``/``edge_scale``/``edge_keep``, jnp-converted).  Per
+    step: in-subgraph sampled neighbors aggregate fresh, their complement
+    reads the **control-variate history** — the device-local last-step
+    representations (``state["hist"]``) for local rows, the pulled stale
+    slab (refreshed by the unchanged ``_digest_pull`` at
+    ``sync_interval`` cadence) for out-of-subgraph rows — and the loss is
+    masked to the seed set.  PUSH, staleness probe and collective routing
+    are byte-identical to the full-batch epoch (shared helpers), so the
+    compiled-HLO census is unchanged: zero all-gathers, the same ragged
+    all_to_all count per store tensor.
+
+    ``settings.sample_estimator``: "cv" (VR-GCN) or "plain" — plain
+    neighbor sampling is exactly the CV estimator against an all-zero
+    history, so it is implemented by feeding zeros as the baseline (the
+    variance benchmark's control).
+    """
+    if settings.mode != "digest":
+        raise ValueError("sampled training rides the stale store — "
+                         f"mode must be 'digest', got {settings.mode!r}")
+    if settings.pull_mode not in ("gather", "collective"):
+        raise ValueError(settings.pull_mode)
+    if settings.pull_mode == "collective" and mesh is None:
+        raise ValueError("pull_mode='collective' needs the mesh")
+    if settings.sample_estimator not in ("cv", "plain"):
+        raise ValueError(f"sample_estimator must be 'cv' or 'plain', "
+                         f"got {settings.sample_estimator!r}")
+    use_projected = gat_projected(cfg)
+    n_hidden = cfg.num_layers - 1
+
+    def sub_loss(params, x_loc, x_h0, cache_m, hist_m, struct_m, labels,
+                 smask, escale, ekeep):
+        # Same per-layer halo tables as the full-batch sub_loss; the
+        # sampled forward additionally reads the local history rows.
+        wl = (struct_m.get("wl_ids"), struct_m.get("wl_cnt"))
+        tables = [halo_ref(x_h0, None, struct_m["out_nbr"],
+                           struct_m["out_wts"], *wl)]
+        for ell in range(n_hidden):
+            if use_projected:
+                zsc = cache_m.get(f"z{ell}_scale")
+                tables.append(projected_halo_ref(
+                    cache_m[f"z{ell}"][0],
+                    zsc[0] if zsc is not None else None,
+                    struct_m["out_nbr"], struct_m["out_wts"]))
+            else:
+                tables.append(halo_ref(
+                    *halo_exchange.layer_table(cache_m, ell),
+                    struct_m["out_nbr"], struct_m["out_wts"], *wl))
+        tables = [jax.lax.stop_gradient(t) for t in tables]
+        hist_tables = [jax.lax.stop_gradient(hist_m[i])
+                       for i in range(n_hidden)]
+        samp = {"edge_scale": escale, "edge_keep": ekeep}
+        logits, push = gnn_forward_sampled(cfg, params, x_loc, tables,
+                                           hist_tables, struct_m, samp)
+        loss = softmax_cross_entropy(logits, labels, smask)
+        return loss, (jnp.stack(push) if push else
+                      jnp.zeros((0,) + x_loc.shape), logits)
+
+    def step_fn(state: dict, data: dict, batch: dict) -> tuple[dict, dict]:
+        r = state["epoch"] + 1
+        x_global = data["x_global"]
+        x_halo0 = x_global[data["halo_ids_x"]]
+        cache = _digest_pull(cfg, settings, state, data, mesh, r)
+        x_local = x_global[data["local_ids"]]
+        if settings.sample_estimator == "cv":
+            hist = state["hist"]
+        else:
+            hist = jnp.zeros_like(state["hist"])
+
+        vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
+                      in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+        (losses, (push_reps, logits)), grads = vg(
+            state["params"], x_local, x_halo0, cache, hist,
+            data["struct"], data["labels"], batch["seed_mask"],
+            batch["edge_scale"], batch["edge_keep"])
+
+        mean_grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        params, opt_state = opt.update(mean_grads, state["opt_state"],
+                                       state["params"], state["step"])
+
+        new_store, new_residual, eps = _digest_push(
+            cfg, settings, state, data, push_reps, mesh, r)
+
+        # Refresh the local history every step: the padded SPMD step
+        # computes every local row's representation anyway, so the CV
+        # baseline for in-subgraph rows is at most one step stale (the
+        # halo side keeps the sync_interval staleness of the store).
+        new_hist = push_reps if n_hidden > 0 else state["hist"]
+
+        train_acc = micro_f1(logits, data["labels"],
+                             batch["seed_mask"].astype(jnp.float32))
+        new_state = {"params": params, "opt_state": opt_state,
+                     "store": new_store, "cache": cache, "hist": new_hist,
+                     "epoch": r, "step": state["step"] + 1}
+        if new_residual is not None:
+            new_state["push_residual"] = new_residual
+        metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
+                   "staleness_eps": eps}
+        return new_state, metrics
+
+    return step_fn
+
+
+def init_sampled_state(cfg: GNNConfig, opt: Optimizer, data: dict,
+                       seed: int = 0,
+                       precision: HaloPrecision = HaloPrecision()) -> dict:
+    """:func:`init_state` + the device-local control-variate history
+    ``hist`` (M, L-1, S, hidden) fp32 — each subgraph's own-row
+    representations from the previous step, zero-initialized like the
+    store (unused rows: the in-ELL's padding entries point at the zero
+    sentinel, and their residual weights are zero anyway)."""
+    state = init_state(cfg, opt, data, seed=seed, precision=precision)
+    num_parts, s = data["local_ids"].shape
+    state["hist"] = jnp.zeros(
+        (num_parts, cfg.num_layers - 1, s, cfg.hidden_dim), jnp.float32)
+    return state
+
+
+def sampled_train(cfg: GNNConfig, opt: Optimizer, data: dict, sampler,
+                  settings: TrainSettings, steps: int, eval_every: int = 10,
+                  seed: int = 0, verbose: bool = False, mesh=None
+                  ) -> tuple[dict, dict]:
+    """Run mini-batch sampled training; returns (final_state, history).
+
+    ``sampler`` is a :class:`repro.graph.sampler.NeighborSampler`; step t
+    consumes the deterministic ``sampler.sample(t)`` batch."""
+    if settings.pull_mode == "collective" and mesh is not None:
+        check_collective_geometry(data, mesh)
+    state = init_sampled_state(cfg, opt, data, seed=seed,
+                               precision=settings.precision)
+    step_fn = jax.jit(make_sampled_epoch_fn(cfg, opt, settings, mesh=mesh))
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+    hist: dict[str, list] = {"epoch": [], "loss": [], "train_f1": [],
+                             "val_f1": [], "test_f1": [], "time": [],
+                             "staleness_eps": []}
+    t0 = time.perf_counter()
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in sampler.sample(t).items()}
+        state, m = step_fn(state, tdata, batch)
+        if (t + 1) % eval_every == 0 or t == steps - 1:
+            ev = evaluate(cfg, state["params"], tdata)
+            hist["epoch"].append(t + 1)
+            hist["loss"].append(float(m["loss"]))
+            hist["train_f1"].append(float(m["train_f1"]))
+            hist["val_f1"].append(float(ev["val_f1"]))
+            hist["test_f1"].append(float(ev["test_f1"]))
+            hist["staleness_eps"].append(
+                np.asarray(m["staleness_eps"]).tolist())
+            hist["time"].append(time.perf_counter() - t0)
+            if verbose:
+                print(f"[sampled/{settings.sample_estimator}] "
+                      f"step {t+1:4d} loss {float(m['loss']):.4f} "
                       f"val_f1 {float(ev['val_f1']):.4f}")
     return state, hist

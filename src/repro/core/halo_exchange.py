@@ -57,6 +57,41 @@ by ``scale / 2 = max|row| / 254`` per element.  With
 rounding residual (:func:`push_ef`), so repeated pushes of slowly-moving
 representations stay unbiased at the same wire cost (Bai et al. 2023).
 
+Second role: control-variate history for sampled training
+----------------------------------------------------------
+
+The same store serves the mini-batch regime
+(:func:`repro.core.digest.make_sampled_epoch_fn`) as VR-GCN-style
+**variance-reduction history** (arXiv 1710.10568): a sampled step
+aggregates its fanout-bounded in-batch neighbors *fresh* and lets the
+out-of-batch complement read *historical* activations, so the estimate
+is ``agg(hist, all nbrs) + agg(scale·(fresh − hist), sampled)`` — the
+history term is a control variate, not a dropped edge.  Store contract
+per sampled step:
+
+  * **Reads.**  Out-of-subgraph (halo) neighbors read the pulled slab —
+    the SAME per-subgraph cache, refreshed by the unchanged PULL at the
+    ``sync_interval`` cadence, in storage precision through the same
+    ``halo_spmm`` path.  In-subgraph out-of-batch neighbors read the
+    device-local fp32 history ``state["hist"]`` (each part's own rows
+    from the previous step — never exchanged, never quantized).
+  * **Writes.**  The step computes every local row's representation
+    anyway (padded SPMD), so it refreshes ``state["hist"]`` wholesale
+    every step and runs the unchanged PUSH (boundary rows into the
+    owner shard) on the Algorithm-1 schedule.
+  * **Communication.**  Byte-identical to the full-batch epoch — the
+    pull/push helpers are shared, so the compiled census (zero
+    all-gathers, one ragged all_to_all per store tensor) is a pinned
+    regression property (tests/test_sampling.py).
+
+``sync_interval`` therefore controls ONLY the halo side's staleness:
+local history is at most one step stale, halo history up to
+``sync_interval`` steps — exactly the Theorem-1 ε tradeoff, now also
+dialing the control variate's residual variance.  When ``fanout >= max
+in-degree`` the residual weights are exactly +0.0 and the estimator
+collapses bitwise to the full-batch aggregation, whatever the store or
+history holds.
+
 Occupancy worklist (the chunk-skipping streamed read path)
 ----------------------------------------------------------
 

@@ -7,6 +7,7 @@ from repro.graph.partition import (ChunkWorklist, LOCAL_ORDERS, PullPlan,
                                    random_partition, reverse_cuthill_mckee)
 from repro.graph.generators import (DATASETS, community_powerlaw_graph,
                                     make_dataset, powerlaw_graph, sbm_graph)
+from repro.graph.sampler import NeighborSampler, build_sampler
 
 __all__ = [
     "EllMatrix", "Graph", "coo_to_ell", "from_edges", "gcn_norm_weights",
@@ -14,5 +15,6 @@ __all__ = [
     "build_chunk_worklist", "build_partitions", "edge_cut",
     "greedy_partition", "partition_report", "random_partition",
     "reverse_cuthill_mckee", "DATASETS", "community_powerlaw_graph",
+    "NeighborSampler", "build_sampler",
     "make_dataset", "powerlaw_graph", "sbm_graph",
 ]

@@ -68,7 +68,24 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
     }
     if "push_residual" in state:
         state_sh["push_residual"] = slab_shard
+    if "hist" in state:
+        # Control-variate history (M, L-1, S, hidden): each device keeps
+        # its own subgraphs' last-step representations — never exchanged.
+        state_sh["hist"] = slab_shard
     return data_sh, state_sh
+
+
+def batch_shardings(mesh) -> dict:
+    """Shardings for one sampler batch (``NeighborSampler.sample``):
+    every array is stacked (M, ...) like the subgraph data, so it shards
+    over the same halo-exchange axes — each device receives only its own
+    subgraphs' seed masks and edge samples."""
+    from repro.core.halo_exchange import exchange_axes
+
+    axes = exchange_axes(mesh)
+    mdim = axes if len(axes) > 1 else axes[0]
+    m_shard = NamedSharding(mesh, P(mdim))
+    return {k: m_shard for k in ("seed_mask", "edge_scale", "edge_keep")}
 
 
 def main():
@@ -133,6 +150,22 @@ def main():
                          "over the dense stream (default: kernel "
                          "SKIP_OCCUPANCY_MAX; >=1 forces it whenever "
                          "streaming)")
+    ap.add_argument("--sampling", action="store_true",
+                    help="mini-batch sampled training: fanout-bounded "
+                         "neighbor sampling with stale-store control "
+                         "variates (out-of-batch neighbors read the "
+                         "HaloExchange store / local history as the "
+                         "variance-reduction baseline); --epochs then "
+                         "counts optimizer steps")
+    ap.add_argument("--fanout", type=int, default=5,
+                    help="sampled in-neighbors per row (rows with "
+                         "deg <= fanout aggregate exactly)")
+    ap.add_argument("--batch-seeds", type=int, default=512,
+                    help="training seed rows per subgraph per step")
+    ap.add_argument("--estimator", default="cv", choices=("cv", "plain"),
+                    help="'cv' = VR-GCN control variates over the stale "
+                         "store; 'plain' = scaled-sample-only neighbor "
+                         "sampling (the variance-ablation control)")
     ap.add_argument("--no-gat-dedup", action="store_true",
                     help="disable the GAT owner-shard projection dedup "
                          "(legacy per-subgraph halo projection)")
@@ -160,7 +193,8 @@ def main():
     settings = TrainSettings(
         sync_interval=args.interval, mode="digest", pull_mode=args.pull,
         precision=HaloPrecision(args.precision,
-                                error_feedback=args.error_feedback))
+                                error_feedback=args.error_feedback),
+        sample_estimator=args.estimator)
     mesh = make_host_mesh(data=args.data_axis, model=1, pod=args.pods)
     if args.pull == "collective":
         # Fail fast with the M-vs-mesh mismatch spelled out (the epoch
@@ -171,18 +205,39 @@ def main():
         print(f"collective mode: {ppd} subgraph(s)/owner shard(s) "
               f"per device over {dict(mesh.shape)}")
 
-    state = init_state(cfg, opt, data, precision=settings.precision)
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
-    data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
-    epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh),
-                       in_shardings=(state_sh, data_sh))
     sp = data["_sp"]
     spec = HaloSpec.from_partitions(sp, cfg.hidden_dim, cfg.num_layers,
                                     settings.precision)
-    t0 = time.perf_counter()
-    for e in range(args.epochs):
-        state, m = epoch_fn(state, tdata)
-    ev = evaluate(cfg, state["params"], tdata)
+    if args.sampling:
+        from repro.core import init_sampled_state, make_sampled_epoch_fn
+        from repro.graph import build_sampler
+
+        sampler = build_sampler(data, args.fanout, args.batch_seeds)
+        print(f"sampling: fanout={args.fanout} (max in-degree "
+              f"{sampler.max_in_degree}), batch_seeds={args.batch_seeds}, "
+              f"estimator={args.estimator}")
+        state = init_sampled_state(cfg, opt, data,
+                                   precision=settings.precision)
+        data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
+        step_fn = jax.jit(
+            make_sampled_epoch_fn(cfg, opt, settings, mesh=mesh),
+            in_shardings=(state_sh, data_sh, batch_shardings(mesh)))
+        t0 = time.perf_counter()
+        for t in range(args.epochs):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in sampler.sample(t).items()}
+            state, m = step_fn(state, tdata, batch)
+        ev = evaluate(cfg, state["params"], tdata)
+    else:
+        state = init_state(cfg, opt, data, precision=settings.precision)
+        data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
+        epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh),
+                           in_shardings=(state_sh, data_sh))
+        t0 = time.perf_counter()
+        for e in range(args.epochs):
+            state, m = epoch_fn(state, tdata)
+        ev = evaluate(cfg, state["params"], tdata)
     sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
     wl = data["_worklist"]
     print(f"mesh={dict(mesh.shape)} epochs={args.epochs} "

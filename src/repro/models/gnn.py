@@ -274,6 +274,71 @@ def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
 _LAYERS = {"gcn": _gcn_layer, "sage": _sage_layer, "gat": _gat_layer}
 
 
+# ---------------------------------------------------------------------------
+# Sampled (control-variate) layer variants — the mini-batch regime
+# ---------------------------------------------------------------------------
+#
+# VR-GCN estimator (arXiv 1710.10568) at the ELL-weight level: with
+# edge_scale = deg/n_sampled at sampled entries (0 elsewhere),
+#
+#   w_fresh = in_wts · edge_scale        (scaled sampled neighbors, fresh)
+#   w_resid = in_wts − w_fresh           (everything else, historical)
+#   agg_in  = spmm(w_fresh, h) + spmm(w_resid, h̄)
+#           = spmm(in_wts, h̄) + Σ_sampled scale·in_wts·(h − h̄)
+#
+# i.e. history-of-all-neighbors plus the inverse-inclusion-scaled fresh
+# minus-stale correction on the sample — unbiased in the sample, and with
+# fanout >= deg the scale is exactly 1.0 so w_fresh == in_wts bitwise and
+# w_resid == +0.0: the estimator IS the full-batch aggregation.  The
+# out-of-subgraph side always reads the stale store (pure history — its
+# own control variate), riding the fused halo_spmm path unchanged.
+
+def _cv_weights(in_wts: jax.Array, samp: dict) -> tuple:
+    w_fresh = in_wts * samp["edge_scale"]
+    return w_fresh, in_wts - w_fresh
+
+
+def _gcn_layer_cv(cfg, p, x_local, h_hist, x_halo, struct, samp):
+    ref = _as_halo_ref(x_halo, struct)
+    w_fresh, w_resid = _cv_weights(struct["in_wts"], samp)
+    agg = spmm(struct["in_nbr"], w_fresh, _pad_sentinel(x_local),
+               backend=cfg.backend)
+    agg = agg + spmm(struct["in_nbr"], w_resid, _pad_sentinel(h_hist),
+                     backend=cfg.backend)
+    agg = agg + _halo_agg(cfg, ref, ref["wts"])
+    return dense(agg, p["w"], p["b"])
+
+
+def _sage_layer_cv(cfg, p, x_local, h_hist, x_halo, struct, samp):
+    # Same full-neighborhood mean denominator as _sage_layer: the CV
+    # split redistributes the numerator, not the normalization.
+    ref = _as_halo_ref(x_halo, struct)
+    in_w, out_w = struct["in_wts"], ref["wts"]
+    denom = jnp.sum(in_w, axis=1, keepdims=True) + jnp.sum(
+        out_w, axis=1, keepdims=True)
+    denom = jnp.maximum(denom, 1e-12)
+    w_fresh, w_resid = _cv_weights(in_w, samp)
+    agg = spmm(struct["in_nbr"], w_fresh / denom, _pad_sentinel(x_local),
+               backend=cfg.backend)
+    agg = agg + spmm(struct["in_nbr"], w_resid / denom,
+                     _pad_sentinel(h_hist), backend=cfg.backend)
+    agg = agg + _halo_agg(cfg, ref, out_w / denom)
+    return (dense(x_local, p["w_self"]) + dense(agg, p["w_nbr"]) + p["b"])
+
+
+def sampled_struct(struct: dict, samp: dict, sentinel: int) -> dict:
+    """GAT fallback view: unsampled in-ELL entries remapped to the zero
+    sentinel, so the layer runs full attention over the sampled rows only
+    (attention renormalizes per destination — no inclusion scaling; and
+    no control variate, since the nonlinear score has no additive
+    history decomposition).  With fanout >= deg this is the identity
+    remap: unsampled entries are exactly the sentinel entries already."""
+    out = dict(struct)
+    out["in_nbr"] = jnp.where(samp["edge_keep"], struct["in_nbr"],
+                              sentinel)
+    return out
+
+
 def gnn_layer(cfg: GNNConfig, layer_params: Pytree, x_local: jax.Array,
               x_halo, struct: dict) -> jax.Array:
     """Run ONE split-aggregation layer — the public single-layer entry.
@@ -314,13 +379,65 @@ def gnn_forward(cfg: GNNConfig, params: Pytree, x_local: jax.Array,
     for ell in range(cfg.num_layers):
         p = params[f"layer_{ell}"]
         out = layer_fn(cfg, p, h, halo_tables[ell], struct)
-        if ell < cfg.num_layers - 1:
-            out = jax.nn.relu(out)
-            if cfg.normalize:   # Algorithm 1 line 11
-                out = out / jnp.maximum(
-                    jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-12)
-            if cfg.residual and out.shape == h.shape:
-                out = out + h
-            push.append(out)
-        h = out
+        h = _finish_layer(cfg, out, h, ell, push)
+    return h, push
+
+
+def _finish_layer(cfg: GNNConfig, out: jax.Array, h: jax.Array, ell: int,
+                  push: list) -> jax.Array:
+    """Post-layer tail shared by the full-batch and sampled forwards:
+    relu + Algorithm-1 line-11 normalize (+ optional residual) on hidden
+    layers, recording the layer's PUSH representation."""
+    if ell < cfg.num_layers - 1:
+        out = jax.nn.relu(out)
+        if cfg.normalize:   # Algorithm 1 line 11
+            out = out / jnp.maximum(
+                jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-12)
+        if cfg.residual and out.shape == h.shape:
+            out = out + h
+        push.append(out)
+    return out
+
+
+def gnn_forward_sampled(cfg: GNNConfig, params: Pytree, x_local: jax.Array,
+                        halo_tables: list, hist_tables: list, struct: dict,
+                        samp: dict) -> tuple[jax.Array, list[jax.Array]]:
+    """Sampled (mini-batch) L-layer forward with stale-history control
+    variates — the VR-GCN estimator over DIGEST's split aggregation.
+
+    Layer 0 aggregates in full: its "history" is the raw features, which
+    are exact, so the CV estimate degenerates to the exact sum — sampling
+    it would only add variance.  Hidden layers ℓ >= 1 aggregate sampled
+    in-subgraph neighbors fresh and the complement from
+    ``hist_tables[ℓ-1]`` (the device-local last-step representations of
+    this subgraph's own rows, same (S, hidden) row space as ``x_local``);
+    the out-of-subgraph side reads the pulled stale slab in
+    ``halo_tables`` — history by construction — through the unchanged
+    fused halo_spmm path.  ``samp`` is one subgraph's slice of a
+    :class:`repro.graph.sampler.NeighborSampler` batch
+    (``edge_scale``/``edge_keep``).  GAT has no additive decomposition of
+    its attention scores, so it falls back to full in-batch attention
+    over the sampled rows (``sampled_struct``; no control variate).
+
+    With ``fanout >= max degree`` this reproduces :func:`gnn_forward`
+    bitwise for gcn/sage (the residual weights are exactly +0.0) and to
+    float tolerance for gat (identical remapped ELL).
+    """
+    h = x_local
+    push: list[jax.Array] = []
+    for ell in range(cfg.num_layers):
+        p = params[f"layer_{ell}"]
+        if ell == 0:
+            out = _LAYERS[cfg.model](cfg, p, h, halo_tables[0], struct)
+        elif cfg.model == "gat":
+            out = _gat_layer(cfg, p, h, halo_tables[ell],
+                             sampled_struct(struct, samp,
+                                            x_local.shape[0]))
+        elif cfg.model == "gcn":
+            out = _gcn_layer_cv(cfg, p, h, hist_tables[ell - 1],
+                                halo_tables[ell], struct, samp)
+        else:
+            out = _sage_layer_cv(cfg, p, h, hist_tables[ell - 1],
+                                 halo_tables[ell], struct, samp)
+        h = _finish_layer(cfg, out, h, ell, push)
     return h, push

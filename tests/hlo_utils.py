@@ -180,3 +180,53 @@ def compile_epoch(g, num_parts: int, mesh, **kw):
     (``.as_text()`` is the partitioned per-device HLO module)."""
     fn, state, tdata = make_epoch(g, num_parts, mesh, **kw)
     return fn.lower(state, tdata).compile()
+
+
+def make_sampled_epoch(g, num_parts: int, mesh=None, *,
+                       storage: str = "fp32",
+                       pull_mode: str = "collective", model: str = "gcn",
+                       hidden: int = 32, sync_interval: int = 2,
+                       fanout: int = 3, batch_seeds: int = 32,
+                       estimator: str = "cv"):
+    """Sampled-regime analogue of :func:`make_epoch`: build
+    ``(jitted_step_fn, state, tdata, batch)`` where ``batch`` is the
+    deterministic step-0 sampler draw (jnp-converted).  Same cfg /
+    settings construction so census comparisons against ``make_epoch``
+    are apples-to-apples."""
+    import jax.numpy as jnp
+
+    from repro.core import (TrainSettings, init_sampled_state,
+                            make_sampled_epoch_fn, prepare_graph_data)
+    from repro.core.halo_exchange import HaloPrecision
+    from repro.graph import build_sampler
+    from repro.launch.train_gnn import batch_shardings, subgraph_shardings
+    from repro.models.gnn import GNNConfig
+    from repro.optim import adam
+
+    data = prepare_graph_data(g, num_parts)
+    tdata = {k: v for k, v in data.items() if not k.startswith("_")}
+    cfg = GNNConfig(model=model, num_layers=3 if model != "gat" else 2,
+                    in_dim=g.features.shape[1], hidden_dim=hidden,
+                    num_classes=int(g.labels.max()) + 1, heads=2)
+    opt = adam(5e-3)
+    settings = TrainSettings(
+        sync_interval=sync_interval, mode="digest", pull_mode=pull_mode,
+        precision=HaloPrecision(storage), sample_estimator=estimator)
+    state = init_sampled_state(cfg, opt, data, precision=settings.precision)
+    sampler = build_sampler(data, fanout, batch_seeds)
+    batch = {k: jnp.asarray(v) for k, v in sampler.sample(0).items()}
+    if mesh is None:
+        fn = jax.jit(make_sampled_epoch_fn(cfg, opt, settings))
+    else:
+        data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
+        fn = jax.jit(make_sampled_epoch_fn(cfg, opt, settings, mesh=mesh),
+                     in_shardings=(state_sh, data_sh,
+                                   batch_shardings(mesh)))
+    return fn, state, tdata, batch
+
+
+def compile_sampled_epoch(g, num_parts: int, mesh, **kw):
+    """Lower + compile the sharded sampled step (see
+    :func:`compile_epoch`)."""
+    fn, state, tdata, batch = make_sampled_epoch(g, num_parts, mesh, **kw)
+    return fn.lower(state, tdata, batch).compile()
