@@ -1,10 +1,25 @@
 """Fig. 7: heterogeneous environment — one straggler worker (8-10 s delay).
 
-DIGEST-A (async) vs synchronous DIGEST on *simulated* wall-clock."""
+DIGEST-A (async) vs synchronous DIGEST on *simulated* wall-clock.
+
+Also runs the fault sweep: DIGEST-A on the community power-law graph
+("papers-sim") under increasing crash + dropped-push rates, recording
+the final loss and the *measured* max staleness (the per-slot age
+table) against the fault-free baseline — written to BENCH_faults.json
+at the repo root (like serve_bench's BENCH_serving.json).
+"""
+import json
+import os
+
 from benchmarks.common import bench_scale, emit
 from benchmarks.gnn_common import setup
-from repro.core import (AsyncSettings, digest_a_train, sync_time_per_round)
+from repro.core import (AsyncSettings, FaultConfig, digest_a_train,
+                        sync_time_per_round)
 from repro.optim import adam
+
+# (crash_rate, drop_push_rate) grid of the fault sweep; rates are
+# per-(round, worker) — documented operating points, not extremes.
+FAULT_GRID = [(0.0, 0.0), (0.01, 0.05), (0.02, 0.15), (0.05, 0.30)]
 
 
 def run() -> list[dict]:
@@ -29,6 +44,57 @@ def run() -> list[dict]:
         "us_per_call": round(t_sync * 1e6, 1),
         "note": "per-round barrier time under the same straggler model",
     }]
+    rows += fault_sweep(scale)
+    return rows
+
+
+def fault_sweep(scale: float) -> list[dict]:
+    _, data, cfg = setup("papers-sim", scale=0.02 * scale, hidden=32)
+    M = int(data["halo_ids"].shape[0])
+    rounds = max(int(M * 40 * scale), M * 15)
+    max_staleness = 30 * M          # server steps; the watchdog bound
+    rows, sweep = [], []
+    for crash, drop in FAULT_GRID:
+        settings = AsyncSettings(
+            sync_interval=5, seed=7, max_staleness=max_staleness,
+            faults=FaultConfig(seed=11, crash_rate=crash, crash_rounds=3,
+                               drop_push_rate=drop))
+        state, hist = digest_a_train(cfg, adam(5e-3), data, settings,
+                                     total_rounds=rounds,
+                                     eval_every_rounds=max(rounds // 4, 1))
+        point = {
+            "crash_rate": crash,
+            "drop_rate": drop,
+            "final_loss": round(hist["loss"][-1], 4),
+            "val_f1": round(hist["val_f1"][-1], 4),
+            "max_staleness_measured": int(state["pull_age_max"]),
+            "max_staleness_bound": max_staleness,
+            "fault_counters": state["fault_counters"],
+        }
+        sweep.append(point)
+        rows.append({
+            "name": f"fig7/faults_c{crash}_d{drop}",
+            "loss": point["final_loss"],
+            "f1": point["val_f1"],
+            "staleness": point["max_staleness_measured"],
+            "crashes": point["fault_counters"]["crashes"],
+            "dropped": point["fault_counters"]["dropped_pushes"],
+        })
+    result = {
+        "dataset": "papers-sim",
+        "num_parts": M,
+        "rounds": rounds,
+        "sync_interval": 5,
+        "staleness_unit": "server steps since owning shard's last "
+                          "accepted push",
+        "sweep": sweep,
+    }
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_faults.json")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
     return rows
 
 

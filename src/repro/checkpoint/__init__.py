@@ -1,5 +1,7 @@
-from repro.checkpoint.checkpoint import (latest_step, read_manifest,
-                                         restore_checkpoint, save_checkpoint)
+from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                         latest_step, read_manifest,
+                                         restore_checkpoint, save_checkpoint,
+                                         verify_checkpoint)
 
-__all__ = ["latest_step", "read_manifest", "restore_checkpoint",
-           "save_checkpoint"]
+__all__ = ["CheckpointCorruptError", "latest_step", "read_manifest",
+           "restore_checkpoint", "save_checkpoint", "verify_checkpoint"]

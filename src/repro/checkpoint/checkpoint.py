@@ -7,6 +7,17 @@ HaloExchange store ({"data": int8/bf16/fp32, "scale": fp32}) round-trips
 its quantized layout byte-for-byte; ``meta`` lets callers record the
 precision/layout config alongside (see ``read_manifest``).
 
+Crash safety: both the npz payload and the JSON manifest are written to
+temp files in the checkpoint directory and published with ``os.replace``
+— the manifest first, then the npz — so a crash at any byte leaves
+either (a) only temp litter, (b) a manifest whose npz is missing, or
+(c) a manifest whose npz bytes don't match its recorded CRC32s.  All
+three are *invalid* states that ``latest_step`` skips and
+``restore_checkpoint`` rejects with :class:`CheckpointCorruptError`; a
+checkpoint is only ever observed as valid once every byte of it is on
+disk.  Per-array CRC32 checksums in the manifest extend the same
+guarantee to torn/truncated npz writes and bit rot.
+
 The owner-sharded store needs no special casing on save — ``np.asarray``
 on a sharded jax array gathers the full (L-1, M·shard_rows, hidden) slab
 to host, and the slot layout is positional *in part order, not device
@@ -24,6 +35,7 @@ import json
 import os
 import re
 import tempfile
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -32,6 +44,18 @@ import numpy as np
 Pytree = Any
 
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint exists on disk but fails validation.
+
+    Raised when the manifest is unreadable, the npz payload is missing or
+    unloadable, the key sets disagree, or a per-array CRC32 in the
+    manifest doesn't match the bytes actually on disk.  Distinct from
+    ``FileNotFoundError`` (no checkpoint at all) and from the
+    ``KeyError``/``ValueError`` a *valid* checkpoint raises when it
+    doesn't fit the caller's template.
+    """
 
 
 def _flatten_with_paths(tree: Pytree) -> dict[str, np.ndarray]:
@@ -59,40 +83,123 @@ def _fmt(entry) -> str:
     return str(entry)
 
 
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _npz_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+
+
+def _manifest_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
                     meta: Optional[dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten_with_paths(tree)
-    manifest = {"step": int(step), "keys": sorted(flat)}
+    manifest = {"step": int(step), "keys": sorted(flat),
+                "checksums": {k: _crc32(v) for k, v in flat.items()}}
     if meta:
         manifest["meta"] = meta
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    path = _npz_path(ckpt_dir, step)
+    fd, tmp_npz = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    fd, tmp_json = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     os.close(fd)
     try:
-        with open(tmp, "wb") as f:
+        # Stage both files completely before publishing either: the
+        # manifest is the commit record (it carries the CRCs the npz
+        # must match), so it is replaced into place first — a crash
+        # between the two replaces leaves manifest-without-payload,
+        # which validation rejects.
+        with open(tmp_npz, "wb") as f:
             np.savez(f, **flat)
-        os.replace(tmp, path)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(tmp_json, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_json, _manifest_path(ckpt_dir, step))
+        os.replace(tmp_npz, path)
     finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f)
+        for tmp in (tmp_npz, tmp_json):
+            if os.path.exists(tmp):
+                os.unlink(tmp)
     return path
 
 
 def read_manifest(ckpt_dir: str, step: int) -> dict:
-    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
-        return json.load(f)
+    """Load a step's manifest; malformed JSON → CheckpointCorruptError."""
+    path = _manifest_path(ckpt_dir, step)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"manifest {path} is not valid JSON: {e}") from e
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> dict:
+    """Validate manifest + npz payload for ``step``; return the manifest.
+
+    Raises ``FileNotFoundError`` if the manifest is absent and
+    :class:`CheckpointCorruptError` if any part of the checkpoint fails
+    validation: unloadable npz, key-set mismatch, or CRC32 mismatch.
+    Manifests written before checksums existed (no ``"checksums"`` key)
+    pass the key check only.
+    """
+    manifest = read_manifest(ckpt_dir, step)
+    path = _npz_path(ckpt_dir, step)
+    try:
+        with np.load(path) as data:
+            keys = set(data.files)
+            arrays = {k: data[k] for k in keys}
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"manifest for step {step} present but payload {path} "
+            f"missing") from e
+    except Exception as e:  # zipfile/pickle errors from a torn write
+        raise CheckpointCorruptError(
+            f"payload {path} unreadable: {e}") from e
+    want = set(manifest.get("keys", []))
+    if want and keys != want:
+        raise CheckpointCorruptError(
+            f"payload {path} key set disagrees with manifest "
+            f"(missing {sorted(want - keys)[:4]}, "
+            f"extra {sorted(keys - want)[:4]})")
+    for key, crc in (manifest.get("checksums") or {}).items():
+        if key not in arrays:
+            raise CheckpointCorruptError(
+                f"payload {path} missing checksummed key {key!r}")
+        if _crc32(arrays[key]) != int(crc):
+            raise CheckpointCorruptError(
+                f"CRC32 mismatch for {key!r} in {path}")
+    return manifest
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose checkpoint validates (see ``verify_checkpoint``).
+
+    Partial or corrupt checkpoints — npz without a manifest, manifest
+    without its npz, truncated payloads, checksum mismatches — are
+    skipped, so a crash mid-save (or bit rot on the newest file) falls
+    back to the most recent checkpoint that is actually restorable.
+    """
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(m.group(1))
+    steps = {int(m.group(1))
              for name in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", name))]
-    return max(steps) if steps else None
+             if (m := re.fullmatch(r"ckpt_(\d+)\.(?:npz|json)", name))}
+    for step in sorted(steps, reverse=True):
+        try:
+            verify_checkpoint(ckpt_dir, step)
+        except (FileNotFoundError, CheckpointCorruptError):
+            continue
+        return step
+    return None
 
 
 def restore_checkpoint(ckpt_dir: str, template: Pytree,
@@ -102,8 +209,9 @@ def restore_checkpoint(ckpt_dir: str, template: Pytree,
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+            raise FileNotFoundError(f"no valid checkpoints in {ckpt_dir}")
+    verify_checkpoint(ckpt_dir, step)
+    path = _npz_path(ckpt_dir, step)
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []

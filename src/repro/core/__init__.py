@@ -8,6 +8,9 @@ from repro.core.digest import (MODES, TrainSettings,
                                sampled_train)
 from repro.core.async_engine import (AsyncSettings, digest_a_train,
                                      store_geometry, sync_time_per_round)
+from repro.core import faults
+from repro.core.faults import (FaultConfig, FaultSchedule,
+                               attach_fault_state, measured_staleness)
 from repro.core.error_bound import measure_error_and_bound, quantization_eps
 from repro.core.comm_model import (CommConstants, epoch_comm_bytes,
                                    epoch_time_model, khop_halo_sizes)
@@ -16,7 +19,8 @@ from repro.core.halo_exchange import HaloPrecision, HaloSpec
 from repro.core import serving
 from repro.core.serving import (ServeConfig, ServePlan, build_serve_plan,
                                 init_serve_store, make_refresh_fn,
-                                serve_query, serve_query_sharded)
+                                refresh_or_degrade, serve_query,
+                                serve_query_sharded)
 from repro.core import stale_store
 
 __all__ = [
@@ -26,11 +30,14 @@ __all__ = [
     "prepare_graph_data", "project_store_tables",
     "init_sampled_state", "make_sampled_epoch_fn", "sampled_train",
     "AsyncSettings", "digest_a_train", "store_geometry",
-    "sync_time_per_round", "measure_error_and_bound", "quantization_eps",
+    "sync_time_per_round",
+    "faults", "FaultConfig", "FaultSchedule", "attach_fault_state",
+    "measured_staleness",
+    "measure_error_and_bound", "quantization_eps",
     "CommConstants",
     "epoch_comm_bytes", "epoch_time_model", "khop_halo_sizes",
     "halo_exchange", "HaloPrecision", "HaloSpec", "stale_store",
     "serving", "ServeConfig", "ServePlan", "build_serve_plan",
-    "init_serve_store", "make_refresh_fn", "serve_query",
-    "serve_query_sharded",
+    "init_serve_store", "make_refresh_fn", "refresh_or_degrade",
+    "serve_query", "serve_query_sharded",
 ]

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpoint as ckpt_io
+from repro.core import faults as faults_mod
 from repro.core import halo_exchange
 from repro.core.digest import (check_worklist_geometry, evaluate,
                                make_subgraph_loss)
@@ -50,6 +52,18 @@ class AsyncSettings:
     # silently aggregating zeros.  False reproduces the cold-store
     # behavior (the regression test's positive control).
     warm_start: bool = True
+    # Deterministic fault injection (repro.core.faults.FaultConfig):
+    # crashes with restart-after-k-rounds, dropped pushes with
+    # retry-with-backoff, delayed pulls (degraded to the last-known-good
+    # cache), and corrupted-then-CRC-rejected wire rows.  None (or an
+    # all-zero-rate config) leaves the trajectory bitwise identical.
+    faults: Optional[faults_mod.FaultConfig] = None
+    # Bounded-staleness watchdog, measured in SERVER STEPS (the unit of
+    # the delay/staleness the probe reports): when any valid halo slot a
+    # pull is about to read is >= max_staleness steps old, the owner's
+    # latest computed representations are force-applied to the store
+    # (a blocking resync) before the pull proceeds.  None disables.
+    max_staleness: Optional[int] = None
 
 
 def store_geometry(data: dict) -> tuple[int, int]:
@@ -80,7 +94,9 @@ def store_geometry(data: dict) -> tuple[int, int]:
 
 def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
                    settings: AsyncSettings, total_rounds: int,
-                   eval_every_rounds: int = 20, seed: int = 0
+                   eval_every_rounds: int = 20, seed: int = 0,
+                   ckpt_dir: Optional[str] = None,
+                   ckpt_every_rounds: int = 0, resume: bool = False
                    ) -> tuple[dict, dict]:
     """Run DIGEST-A; returns (final_state_dict, history).
 
@@ -89,15 +105,41 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     At each eval tick, ``loss`` is the mean of every worker's most recent
     round loss (not whichever worker happened to land on the tick) and
     ``delay`` the *max* staleness across workers; ``round_loss`` /
-    ``round_worker`` log every completed round, and ``cold_rows`` the
+    ``round_worker`` log every completed round, ``cold_rows`` the
     running count of all-zero (never-pushed) valid halo rows consumed by
-    pulls — 0 under the default warm start.
+    pulls — 0 under the default warm start — and ``pull_age`` the
+    running max age (server steps since the owning worker's last
+    accepted push) over the valid halo slots pulls have read: the
+    fault-induced component of staleness, measured per-slot from the
+    ``last_push_step`` age table rather than inferred.
+
+    Fault semantics (``settings.faults``, all decisions replayable —
+    see :mod:`repro.core.faults`): a *crashed* worker skips its round
+    and restarts ``crash_rounds`` round-times later, re-fetching server
+    params and re-pulling its halo before the next round; a *dropped*
+    or *corrupted-and-rejected* push leaves the store at its
+    last-known-good rows and the worker retries on later rounds with
+    exponential backoff (retries send the CURRENT round's
+    representations — fresher than the lost payload); a *delayed* pull
+    keeps computing on the stale local cache and re-attempts next
+    round.  ``settings.max_staleness`` arms the watchdog documented on
+    :class:`AsyncSettings`.  Final counters land in
+    ``state["fault_counters"]``.
+
+    ``ckpt_dir`` + ``ckpt_every_rounds`` write an atomic, checksummed
+    checkpoint of the COMPLETE simulator state (params, opt state,
+    store, per-worker caches/snapshots/residuals, event heap, age
+    table, fault bookkeeping, RNG cursor) every N completed rounds;
+    ``resume=True`` restores the newest valid one and continues —
+    kill-and-resume is bitwise equal to the uninterrupted run.
     """
     check_worklist_geometry(cfg, data)
     rng = np.random.default_rng(settings.seed)
     M = int(data["halo_ids"].shape[0])
     H = int(data["halo_ids"].shape[1])
     L1 = max(cfg.num_layers - 1, 1)
+    schedule = faults_mod.check_schedule(settings.faults)
+    fcfg = settings.faults or faults_mod.FaultConfig()
 
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
     opt_state = opt.init(params)
@@ -152,7 +194,40 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     x_local_all = np.asarray(data["x_global"])[np.asarray(data["local_ids"])]
     x_halo_all = np.asarray(data["x_global"])[np.asarray(data["halo_ids"])]
 
-    if settings.warm_start and cfg.num_layers > 1:
+    # Host-side slot views for the per-slot age table and fault paths.
+    ls_np = np.asarray(data["local_slots"])
+    lv_np = np.asarray(data["local_valid"])
+    hs_np = np.asarray(data["halo_slots"])
+    hv_np = np.asarray(data["halo_valid"])
+    total_rows = (num_slots + 1)
+    # Per-slot age table: server step of the last ACCEPTED push that
+    # wrote each store row.  Feeds the pull-time staleness measurement
+    # and the max_staleness watchdog; pure host bookkeeping, never
+    # touches the jitted math.
+    last_push_step = np.zeros(total_rows, np.int64)
+    # Latest representations each worker computed (the payload a forced
+    # resync re-applies) + whether any exist yet.
+    last_reps = [jnp.zeros((L1, S, cfg.hidden_dim), jnp.float32)
+                 for _ in range(M)]
+    has_reps = np.zeros(M, bool)
+    # Fault bookkeeping (all inert when no schedule is active).
+    push_failed = np.zeros(M, bool)
+    retry_at = np.zeros(M, np.int64)       # worker round of next retry
+    fail_count = np.zeros(M, np.int64)
+    pull_pending = np.zeros(M, bool)       # delayed pull → retry next round
+    restarting = np.zeros(M, bool)         # crashed; re-fetch on wake
+    counters = {"crashes": 0, "dropped_pushes": 0, "rejected_pushes": 0,
+                "retried_pushes": 0, "delayed_pulls": 0,
+                "forced_resyncs": 0}
+    pull_age_max = 0
+
+    # Resume decides whether the warm start below runs at all: the
+    # restored store/caches already contain the (possibly much later)
+    # state, so recomputing round-0 pushes would be wasted work.
+    resume_step = (ckpt_io.latest_step(ckpt_dir)
+                   if (resume and ckpt_dir) else None)
+
+    if settings.warm_start and cfg.num_layers > 1 and resume_step is None:
         # Round-0 PUSH: seed every shard with the representations at the
         # initial parameters before any worker runs — the same bits each
         # worker's own round-1 push will write (round 1 trains against
@@ -172,6 +247,9 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
             else:
                 store = push_rows(store, owner, data["local_slots"][m],
                                   data["local_valid"][m], push0)
+            last_reps[m] = push0
+            has_reps[m] = True
+            last_push_step[ls_np[m][lv_np[m]]] = 0
 
     # Per-worker speed model.
     speeds = np.exp(rng.normal(0, settings.worker_speed_jitter, size=M))
@@ -189,7 +267,7 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     step = jnp.asarray(0, jnp.int32)
     hist = {"round": [], "sim_time": [], "loss": [], "val_f1": [],
             "test_f1": [], "delay": [], "round_worker": [],
-            "round_loss": [], "cold_rows": []}
+            "round_loss": [], "cold_rows": [], "pull_age": []}
     snapshot_step = np.zeros(M, np.int64)   # server step when params fetched
     params_snapshots: list = [params] * M
     rounds_done = 0
@@ -203,24 +281,163 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
 
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
 
+    def ckpt_tree():
+        """The COMPLETE simulator state as one pytree (see docstring).
+        The heap always holds exactly one event per worker, so it
+        round-trips as two (M,) arrays; heapify of the same multiset
+        pops in the same (time, worker) order."""
+        hsort = sorted(heap)
+        return {
+            "params": params, "opt_state": opt_state, "store": store,
+            "step": step,
+            "halo_cache": halo_cache, "push_residual": push_residual,
+            "snapshots": params_snapshots,
+            "worker_round": worker_round, "snapshot_step": snapshot_step,
+            "last_loss": last_loss, "last_delay": last_delay,
+            "heap_t": np.asarray([t for t, _ in hsort], np.float64),
+            "heap_m": np.asarray([w for _, w in hsort], np.int64),
+            "last_push_step": last_push_step,
+            "last_reps": jnp.stack(last_reps), "has_reps": has_reps,
+            "push_failed": push_failed, "retry_at": retry_at,
+            "fail_count": fail_count, "pull_pending": pull_pending,
+            "restarting": restarting,
+        }
+
+    if resume_step is not None:
+        tree, _ = ckpt_io.restore_checkpoint(ckpt_dir, ckpt_tree(),
+                                             step=resume_step)
+        meta = ckpt_io.read_manifest(ckpt_dir, resume_step)["meta"]
+        params, opt_state, store = (tree["params"], tree["opt_state"],
+                                    tree["store"])
+        step = jnp.asarray(tree["step"], jnp.int32)
+        halo_cache = list(tree["halo_cache"])
+        push_residual = list(tree["push_residual"])
+        params_snapshots = list(tree["snapshots"])
+        worker_round = tree["worker_round"]
+        snapshot_step = tree["snapshot_step"]
+        last_loss, last_delay = tree["last_loss"], tree["last_delay"]
+        heap = [(float(t), int(w))
+                for t, w in zip(tree["heap_t"], tree["heap_m"])]
+        heapq.heapify(heap)
+        last_push_step = tree["last_push_step"]
+        last_reps = [jnp.asarray(x) for x in tree["last_reps"]]
+        has_reps = tree["has_reps"]
+        push_failed, retry_at = tree["push_failed"], tree["retry_at"]
+        fail_count = tree["fail_count"]
+        pull_pending, restarting = (tree["pull_pending"],
+                                    tree["restarting"])
+        rng.bit_generator.state = meta["rng_state"]
+        rounds_done = int(meta["rounds_done"])
+        cold_rows = int(meta["cold_rows"])
+        counters = dict(meta["counters"])
+        pull_age_max = int(meta["pull_age_max"])
+        hist = {k: list(v) for k, v in meta["hist"].items()}
+
+    def accept_push(store, m, r, reps, residual):
+        """One wire transfer of worker m's rows at its round r: subject
+        to the drop / corrupt schedule; the receiver CRC-checks the
+        payload and rejects corrupted rows (observable effect = a drop
+        plus a ``rejected_pushes`` count).  Returns (store, residual,
+        accepted)."""
+        if schedule is not None:
+            if schedule.drops_push(r, m):
+                counters["dropped_pushes"] += 1
+                return store, residual, False
+            if schedule.corrupts_push(r, m):
+                wire = np.asarray(reps)
+                sent = faults_mod.corrupt_rows(wire, fcfg.seed, r, m)
+                if (faults_mod.wire_crc32(sent)
+                        != faults_mod.wire_crc32(wire)):
+                    counters["rejected_pushes"] += 1
+                    return store, residual, False
+        owner = jnp.asarray(m, jnp.int32)
+        if settings.precision.error_feedback:
+            store, residual = push_rows_ef(
+                store, owner, data["local_slots"][m],
+                data["local_valid"][m], reps, residual)
+        else:
+            store = push_rows(store, owner, data["local_slots"][m],
+                              data["local_valid"][m], reps)
+        last_push_step[ls_np[m][lv_np[m]]] = int(step)
+        return store, residual, True
+
     while rounds_done < total_rounds:
         now, m = heapq.heappop(heap)
+        if restarting[m]:
+            # Crashed worker coming back: re-fetch server params and
+            # force a halo re-pull before its next round — a restart is
+            # a resync, not a resumption of lost in-flight state.
+            params_snapshots[m] = params
+            snapshot_step[m] = int(step)
+            pull_pending[m] = True
+            restarting[m] = False
+        if schedule is not None and schedule.crashes(worker_round[m] + 1, m):
+            # The worker goes down instead of running this round — the
+            # round's work is lost (the counter advances so the restart
+            # queries a FRESH schedule round, not the same crashing one)
+            # and it restarts crash_rounds round-times later.  No rng
+            # draws — the downtime uses the deterministic base speed so
+            # a zero-rate schedule perturbs nothing.
+            counters["crashes"] += 1
+            worker_round[m] += 1
+            restarting[m] = True
+            down = fcfg.crash_rounds * settings.base_round_time * speeds[m]
+            heapq.heappush(heap, (now + down, m))
+            continue
         worker_round[m] += 1
         r = worker_round[m]
 
         # Periodic PULL from the shared compact store (non-blocking read;
-        # dequantized into this worker's private fp32 table).
-        if r % settings.sync_interval == 0:
-            pulled = halo_exchange.pull(
-                store, data["halo_slots"][m][None])[0]
-            # Cold-store probe: a valid halo row that is all-zero across
-            # every layer was never pushed (legitimately-pushed rows are
-            # post-relu representations of a real forward — an exactly
-            # all-zero one is measure-zero).  Stays 0 under warm_start.
-            zero_rows = ((jnp.abs(pulled).max(axis=(0, 2)) == 0)
-                         & data["halo_valid"][m])
-            cold_rows += int(zero_rows.sum())
-            halo_cache[m] = pulled
+        # dequantized into this worker's private fp32 table).  A delayed
+        # pull degrades to the last-known-good cache and re-attempts next
+        # round; the age table measures exactly how stale the rows a pull
+        # reads are, and the watchdog force-resyncs overdue owners first.
+        if r % settings.sync_interval == 0 or pull_pending[m]:
+            if schedule is not None and schedule.delays_pull(r, m):
+                counters["delayed_pulls"] += 1
+                pull_pending[m] = True
+            else:
+                pull_pending[m] = False
+                if cfg.num_layers > 1:
+                    hs, hv = hs_np[m], hv_np[m]
+                    ages = int(step) - last_push_step[hs]
+                    if settings.max_staleness is not None:
+                        over = hv & (ages >= settings.max_staleness)
+                        if over.any():
+                            # Blocking resync: apply the overdue owners'
+                            # latest representations before reading.
+                            for o in np.unique(hs[over] // shard_rows):
+                                if not has_reps[o]:
+                                    continue
+                                owner = jnp.asarray(int(o), jnp.int32)
+                                if settings.precision.error_feedback:
+                                    store, push_residual[o] = push_rows_ef(
+                                        store, owner, data["local_slots"][o],
+                                        data["local_valid"][o], last_reps[o],
+                                        push_residual[o])
+                                else:
+                                    store = push_rows(
+                                        store, owner, data["local_slots"][o],
+                                        data["local_valid"][o], last_reps[o])
+                                last_push_step[ls_np[o][lv_np[o]]] = int(step)
+                                push_failed[o] = False
+                                fail_count[o] = 0
+                                counters["forced_resyncs"] += 1
+                            ages = int(step) - last_push_step[hs]
+                    if hv.any():
+                        pull_age_max = max(pull_age_max,
+                                           int(ages[hv].max()))
+                pulled = halo_exchange.pull(
+                    store, data["halo_slots"][m][None])[0]
+                # Cold-store probe: a valid halo row that is all-zero
+                # across every layer was never pushed (legitimately-
+                # pushed rows are post-relu representations of a real
+                # forward — an exactly all-zero one is measure-zero).
+                # Stays 0 under warm_start.
+                zero_rows = ((jnp.abs(pulled).max(axis=(0, 2)) == 0)
+                             & data["halo_valid"][m])
+                cold_rows += int(zero_rows.sum())
+                halo_cache[m] = pulled
 
         struct_m = {k: v[m] for k, v in data["struct"].items()}
         loss, grads, push = worker_grad(
@@ -237,16 +454,36 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         params, opt_state = apply_update(params, opt_state, grads, step)
         step = step + 1
 
-        # Periodic PUSH of fresh representations (boundary rows only).
-        if (r - 1) % settings.sync_interval == 0 and cfg.num_layers > 1:
-            owner = jnp.asarray(m, jnp.int32)
-            if settings.precision.error_feedback:
-                store, push_residual[m] = push_rows_ef(
-                    store, owner, data["local_slots"][m],
-                    data["local_valid"][m], push, push_residual[m])
-            else:
-                store = push_rows(store, owner, data["local_slots"][m],
-                                  data["local_valid"][m], push)
+        # Periodic PUSH of fresh representations (boundary rows only),
+        # with retry-with-backoff on wire failures: a failed push round
+        # marks the worker and later rounds re-send the then-current
+        # representations (each attempt re-subject to the schedule).
+        if cfg.num_layers > 1:
+            last_reps[m] = push
+            has_reps[m] = True
+            if (r - 1) % settings.sync_interval == 0:
+                store, push_residual[m], ok = accept_push(
+                    store, m, r, push, push_residual[m])
+                if ok:
+                    push_failed[m] = False
+                    fail_count[m] = 0
+                else:
+                    push_failed[m] = True
+                    fail_count[m] += 1
+                    retry_at[m] = r + fcfg.retry_backoff
+            elif push_failed[m] and r >= retry_at[m]:
+                store, push_residual[m], ok = accept_push(
+                    store, m, r, push, push_residual[m])
+                if ok:
+                    counters["retried_pushes"] += 1
+                    push_failed[m] = False
+                    fail_count[m] = 0
+                else:
+                    fail_count[m] += 1
+                    backoff = min(
+                        fcfg.retry_backoff * 2 ** (int(fail_count[m]) - 1),
+                        fcfg.retry_backoff_cap)
+                    retry_at[m] = r + backoff
 
         # Fetch fresh params, schedule next round.
         params_snapshots[m] = params
@@ -265,9 +502,21 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
             hist["test_f1"].append(float(ev["test_f1"]))
             hist["delay"].append(int(last_delay.max()))
             hist["cold_rows"].append(cold_rows)
+            hist["pull_age"].append(pull_age_max)
+
+        if (ckpt_dir and ckpt_every_rounds
+                and rounds_done % ckpt_every_rounds == 0
+                and rounds_done < total_rounds):
+            meta = {"rng_state": rng.bit_generator.state,
+                    "rounds_done": rounds_done, "cold_rows": cold_rows,
+                    "counters": counters, "pull_age_max": pull_age_max,
+                    "hist": hist}
+            ckpt_io.save_checkpoint(ckpt_dir, rounds_done, ckpt_tree(),
+                                    meta=meta)
 
     state = {"params": params, "opt_state": opt_state, "store": store,
-             "step": step}
+             "step": step, "fault_counters": counters,
+             "pull_age_max": pull_age_max}
     return state, hist
 
 

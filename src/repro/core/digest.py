@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpoint as ckpt_io
+from repro.core import faults as faults_mod
 from repro.core import halo_exchange
 from repro.core.halo_exchange import HaloPrecision
 from repro.graph.graph import Graph
@@ -339,6 +341,14 @@ class TrainSettings:
     # variates); "plain" drops the history term — classic scaled neighbor
     # sampling, the variance-benchmark baseline.
     sample_estimator: str = "cv"
+    # Bounded-staleness watchdog: when a shard's last successful push is
+    # >= max_staleness rounds old, its push is forced on the next round
+    # regardless of the sync cadence or the fault mask — Theorems 1/3
+    # assume bounded staleness, so the watchdog converts "arbitrarily
+    # stale under faults" back into the regime the analysis covers.
+    # Requires the fault-aware state leaves (faults.attach_fault_state);
+    # None disables the watchdog.
+    max_staleness: Optional[int] = None
 
 
 def _digest_pull(cfg: GNNConfig, settings: TrainSettings, state: dict,
@@ -390,14 +400,38 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
     compiled epoch carries ZERO cross-device push traffic — the SPMD
     scatter/gather fallback is the partitioner-dependent path (same
     math, but XLA cannot prove writes stay in-shard and materializes
-    collectives around them).  Returns (store, push_residual, eps)."""
+    collectives around them).
+
+    Fault-aware when ``state`` carries the ``faults.attach_fault_state``
+    leaves: the host-refreshed per-shard ``push_ok`` mask AND-gates each
+    shard's rows into the *same* compiled scatter (masked rows route to
+    the shard's sentinel slot, so the store keeps last-known-good
+    contents — no program change, census identical), and the per-shard
+    ``last_push_round`` age table records successful pushes so
+    fault-induced staleness is measured rather than silent.  With
+    ``settings.max_staleness`` set, shards whose age reaches the bound
+    are force-pushed on the next round even off-cadence (the blocking
+    resync the Theorem-1/3 bounded-staleness analysis needs).  Without
+    the fault leaves the exact pre-fault program compiles.
+
+    Returns (store, push_residual, eps, last_push_round)."""
     new_store = state["store"]
     new_residual = state.get("push_residual")
+    new_last = state.get("last_push_round")
     eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
     if settings.mode == "digest" and cfg.num_layers > 1:
         do_push = ((r - 1) % settings.sync_interval == 0)
         num_parts = data["local_slots"].shape[0]
         shard_rows = state["store"]["data"].shape[1] // num_parts
+        local_valid = data["local_valid"]
+        if new_last is not None:
+            ok = do_push & state["push_ok"]                    # (M,)
+            if settings.max_staleness is not None:
+                ok = ok | ((r - new_last) >= settings.max_staleness)
+            do_push = jnp.any(ok)
+            local_valid = local_valid & ok[:, None]
+            new_last = jnp.where(ok, jnp.asarray(r, new_last.dtype),
+                                 new_last)
         if settings.pull_mode == "collective":
             eps = halo_exchange.shard_staleness_error(
                 state["store"], push_reps, data["local_slots"],
@@ -406,12 +440,12 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
             def _push():
                 return halo_exchange.shard_push(
                     state["store"], data["local_slots"],
-                    data["local_valid"], push_reps, shard_rows, mesh)
+                    local_valid, push_reps, shard_rows, mesh)
 
             def _push_ef():
                 return halo_exchange.shard_push_ef(
                     state["store"], data["local_slots"],
-                    data["local_valid"], push_reps,
+                    local_valid, push_reps,
                     state["push_residual"], shard_rows, mesh)
         else:
             eps = halo_exchange.staleness_error(
@@ -421,22 +455,28 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
             def _push():
                 return halo_exchange.push(
                     state["store"], data["local_slots"],
-                    data["local_valid"], push_reps,
+                    local_valid, push_reps,
                     data["sentinel_slots"])
 
             def _push_ef():
                 return halo_exchange.push_ef(
                     state["store"], data["local_slots"],
-                    data["local_valid"], push_reps,
+                    local_valid, push_reps,
                     state["push_residual"], data["sentinel_slots"])
         if settings.precision.error_feedback:
             new_store, new_residual = jax.lax.cond(
                 do_push, _push_ef,
                 lambda: (state["store"], state["push_residual"]))
+            if new_last is not None:
+                # A masked shard wrote nothing, so its EF residual must
+                # not absorb this round's quantization error either.
+                new_residual = jnp.where(ok[:, None, None, None],
+                                         new_residual,
+                                         state["push_residual"])
         else:
             new_store = jax.lax.cond(do_push, _push,
                                      lambda: state["store"])
-    return new_store, new_residual, eps
+    return new_store, new_residual, eps, new_last
 
 
 def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
@@ -571,7 +611,7 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                 lambda p, g: p - settings.correction_lr * g, params,
                 corr_grads)
 
-        new_store, new_residual, eps = _digest_push(
+        new_store, new_residual, eps, new_last = _digest_push(
             cfg, settings, state, data, push_reps, mesh, r)
 
         train_acc = micro_f1(logits, data["labels"],
@@ -583,6 +623,10 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
             new_state["push_residual"] = new_residual
         metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
                    "staleness_eps": eps}
+        if new_last is not None:
+            new_state["push_ok"] = state["push_ok"]
+            new_state["last_push_round"] = new_last
+            metrics["push_age"] = faults_mod.measured_staleness(new_last, r)
         return new_state, metrics
 
     return epoch_fn
@@ -651,23 +695,61 @@ def evaluate(cfg: GNNConfig, params: Pytree, data: dict) -> dict:
 def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
                  settings: TrainSettings, epochs: int,
                  eval_every: int = 10, seed: int = 0,
-                 verbose: bool = False, mesh=None) -> tuple[dict, dict]:
+                 verbose: bool = False, mesh=None, faults=None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 resume: bool = False) -> tuple[dict, dict]:
     """Run training; returns (final_state, history dict of lists).
 
     ``mesh`` is required for ``pull_mode="collective"`` (the explicit
     shard_map pull/push paths — single- or multi-pod; the exchange
-    auto-detects a "pod" axis); the default gather mode ignores it."""
+    auto-detects a "pod" axis); the default gather mode ignores it.
+
+    ``faults`` (a :class:`repro.core.faults.FaultConfig` or
+    ``FaultSchedule``) injects deterministic push faults through the
+    per-shard ``push_ok`` mask — see ``_digest_push``; combined with
+    ``settings.max_staleness`` the watchdog bounds the resulting
+    staleness.  A ``None``/zero-rate schedule leaves the trajectory
+    bitwise identical to a run without fault state.
+
+    ``ckpt_dir`` + ``ckpt_every`` save an atomic, checksummed
+    checkpoint of the full training state every ``ckpt_every`` epochs;
+    ``resume=True`` restores the newest *valid* checkpoint (corrupt or
+    partial ones are skipped) and continues to ``epochs`` — the epoch
+    function is deterministic in its state, so a killed-and-resumed
+    run finishes bitwise equal to an uninterrupted one (gcn/sage;
+    gat ≤ 1e-6)."""
     if settings.pull_mode == "collective" and mesh is not None:
         check_collective_geometry(data, mesh)
+    schedule = faults_mod.check_schedule(faults)
+    num_parts = int(data["local_ids"].shape[0])
+    fault_aware = (schedule is not None
+                   or settings.max_staleness is not None)
     state = init_state(cfg, opt, data, seed=seed,
                        precision=settings.precision)
+    if fault_aware:
+        state = faults_mod.attach_fault_state(state, num_parts)
+    start = 0
+    if resume:
+        if ckpt_dir is None:
+            raise ValueError("resume=True needs ckpt_dir")
+        step = ckpt_io.latest_step(ckpt_dir)
+        if step is not None:
+            state, _ = ckpt_io.restore_checkpoint(ckpt_dir, state,
+                                                  step=step)
+            start = int(np.asarray(state["epoch"]))
     epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh))
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
     hist: dict[str, list] = {"epoch": [], "loss": [], "train_f1": [],
                              "val_f1": [], "test_f1": [], "time": [],
                              "staleness_eps": []}
+    if fault_aware:
+        hist["push_age"] = []
     t0 = time.perf_counter()
-    for e in range(epochs):
+    for e in range(start, epochs):
+        if fault_aware:
+            ok = (schedule.push_ok(e + 1, num_parts) if schedule is not None
+                  else np.ones(num_parts, dtype=bool))
+            state["push_ok"] = jnp.asarray(ok)
         state, m = epoch_fn(state, tdata)
         if (e + 1) % eval_every == 0 or e == epochs - 1:
             ev = evaluate(cfg, state["params"], tdata)
@@ -679,10 +761,14 @@ def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
             hist["staleness_eps"].append(
                 np.asarray(m["staleness_eps"]).tolist())
             hist["time"].append(time.perf_counter() - t0)
+            if fault_aware:
+                hist["push_age"].append(int(m["push_age"]))
             if verbose:
                 print(f"[{settings.mode}] epoch {e+1:4d} "
                       f"loss {float(m['loss']):.4f} "
                       f"val_f1 {float(ev['val_f1']):.4f}")
+        if ckpt_dir and ckpt_every and (e + 1) % ckpt_every == 0:
+            ckpt_io.save_checkpoint(ckpt_dir, e + 1, state)
     return state, hist
 
 
@@ -775,7 +861,7 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
         params, opt_state = opt.update(mean_grads, state["opt_state"],
                                        state["params"], state["step"])
 
-        new_store, new_residual, eps = _digest_push(
+        new_store, new_residual, eps, new_last = _digest_push(
             cfg, settings, state, data, push_reps, mesh, r)
 
         # Refresh the local history every step: the padded SPMD step
@@ -793,6 +879,10 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
             new_state["push_residual"] = new_residual
         metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
                    "staleness_eps": eps}
+        if new_last is not None:
+            new_state["push_ok"] = state["push_ok"]
+            new_state["last_push_round"] = new_last
+            metrics["push_age"] = faults_mod.measured_staleness(new_last, r)
         return new_state, metrics
 
     return step_fn
@@ -815,23 +905,50 @@ def init_sampled_state(cfg: GNNConfig, opt: Optimizer, data: dict,
 
 def sampled_train(cfg: GNNConfig, opt: Optimizer, data: dict, sampler,
                   settings: TrainSettings, steps: int, eval_every: int = 10,
-                  seed: int = 0, verbose: bool = False, mesh=None
+                  seed: int = 0, verbose: bool = False, mesh=None,
+                  faults=None, ckpt_dir: Optional[str] = None,
+                  ckpt_every: int = 0, resume: bool = False
                   ) -> tuple[dict, dict]:
     """Run mini-batch sampled training; returns (final_state, history).
 
     ``sampler`` is a :class:`repro.graph.sampler.NeighborSampler`; step t
-    consumes the deterministic ``sampler.sample(t)`` batch."""
+    consumes the deterministic ``sampler.sample(t)`` batch.  ``faults``
+    and ``ckpt_dir``/``ckpt_every``/``resume`` behave exactly as in
+    :func:`digest_train` — both the sampler and the fault schedule are
+    pure functions of the step index, so a resumed run replays the
+    identical batch and fault sequence."""
     if settings.pull_mode == "collective" and mesh is not None:
         check_collective_geometry(data, mesh)
+    schedule = faults_mod.check_schedule(faults)
+    num_parts = int(data["local_ids"].shape[0])
+    fault_aware = (schedule is not None
+                   or settings.max_staleness is not None)
     state = init_sampled_state(cfg, opt, data, seed=seed,
                                precision=settings.precision)
+    if fault_aware:
+        state = faults_mod.attach_fault_state(state, num_parts)
+    start = 0
+    if resume:
+        if ckpt_dir is None:
+            raise ValueError("resume=True needs ckpt_dir")
+        step = ckpt_io.latest_step(ckpt_dir)
+        if step is not None:
+            state, _ = ckpt_io.restore_checkpoint(ckpt_dir, state,
+                                                  step=step)
+            start = int(np.asarray(state["epoch"]))
     step_fn = jax.jit(make_sampled_epoch_fn(cfg, opt, settings, mesh=mesh))
     tdata = {k: v for k, v in data.items() if not k.startswith("_")}
     hist: dict[str, list] = {"epoch": [], "loss": [], "train_f1": [],
                              "val_f1": [], "test_f1": [], "time": [],
                              "staleness_eps": []}
+    if fault_aware:
+        hist["push_age"] = []
     t0 = time.perf_counter()
-    for t in range(steps):
+    for t in range(start, steps):
+        if fault_aware:
+            ok = (schedule.push_ok(t + 1, num_parts) if schedule is not None
+                  else np.ones(num_parts, dtype=bool))
+            state["push_ok"] = jnp.asarray(ok)
         batch = {k: jnp.asarray(v) for k, v in sampler.sample(t).items()}
         state, m = step_fn(state, tdata, batch)
         if (t + 1) % eval_every == 0 or t == steps - 1:
@@ -844,8 +961,12 @@ def sampled_train(cfg: GNNConfig, opt: Optimizer, data: dict, sampler,
             hist["staleness_eps"].append(
                 np.asarray(m["staleness_eps"]).tolist())
             hist["time"].append(time.perf_counter() - t0)
+            if fault_aware:
+                hist["push_age"].append(int(m["push_age"]))
             if verbose:
                 print(f"[sampled/{settings.sample_estimator}] "
                       f"step {t+1:4d} loss {float(m['loss']):.4f} "
                       f"val_f1 {float(ev['val_f1']):.4f}")
+        if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
+            ckpt_io.save_checkpoint(ckpt_dir, t + 1, state)
     return state, hist

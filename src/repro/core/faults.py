@@ -1,0 +1,187 @@
+"""Deterministic fault injection for DIGEST training and simulation.
+
+Failure testing only pays off when a failing run can be replayed
+exactly, so every fault decision here is a pure function of
+``(seed, fault_class, round, worker)`` — the same counter-based design
+as the PR-8 neighbor sampler: ``np.random.default_rng([seed, tag,
+round, worker])`` seeds a fresh generator per decision, so decisions
+are order-independent (it doesn't matter which worker's event fires
+first), stable under resume (re-querying round r after a restore gives
+the same answer), and independent of the engines' own RNG streams (a
+zero-rate schedule perturbs nothing — trajectories stay bitwise
+identical to a run with no schedule at all).
+
+Fault classes
+-------------
+``crash``         worker goes down at the start of a round and is back
+                  ``crash_rounds`` rounds later (restart re-fetches
+                  server params; its shard's store rows freeze).
+``drop_push``     a push round's wire transfer is lost.
+``delay_pull``    a due pull is deferred to the next round; the worker
+                  keeps computing on its last-known-good halo cache.
+``corrupt_push``  the wire payload is bit-flipped in flight; the
+                  receiver detects the CRC mismatch and rejects the
+                  rows (observable effect = a dropped push, plus a
+                  ``rejected_pushes`` count).
+
+The SPMD epoch consumes the schedule as a per-shard boolean
+``push_ok`` mask (see :meth:`FaultSchedule.push_ok`) threaded through
+``state`` so the compiled program is unchanged — rows of a masked
+shard route to the shard's sentinel slot inside the existing push
+scatter, leaving last-known-good store contents in place.  The
+DIGEST-A event simulator consumes the per-decision predicates
+directly.
+
+The paper's Theorems 1/3 bound convergence by the *staleness* of
+pulled representations, which is what makes dropping a push a
+degradation rather than an error: the affected rows simply age.  The
+age table (``last_push_round``) keeps that extra staleness measured,
+and a ``max_staleness`` watchdog turns "too stale" into a forced
+resync instead of silent divergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# Distinct integer tags keep the per-class decision streams disjoint.
+_TAG_CRASH = 0x11
+_TAG_DROP = 0x22
+_TAG_DELAY = 0x33
+_TAG_CORRUPT = 0x44
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Rates and knobs for a :class:`FaultSchedule`.
+
+    Rates are per-(round, worker) probabilities in [0, 1].  ``enabled``
+    is False when every rate is zero — engines use it to skip fault
+    bookkeeping entirely, which is what makes the zero-fault parity
+    guarantee trivial to uphold.
+    """
+    seed: int = 0
+    crash_rate: float = 0.0
+    crash_rounds: int = 3          # rounds a crashed worker stays down
+    drop_push_rate: float = 0.0
+    delay_pull_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    retry_backoff: int = 1         # rounds before first push retry; doubles
+    retry_backoff_cap: int = 8     # ... up to this many rounds
+
+    def __post_init__(self):
+        for name in ("crash_rate", "drop_push_rate", "delay_pull_rate",
+                     "corrupt_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} not in [0, 1]")
+        if self.crash_rounds < 1:
+            raise ValueError("crash_rounds must be >= 1")
+        if self.retry_backoff < 1:
+            raise ValueError("retry_backoff must be >= 1")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.crash_rate > 0 or self.drop_push_rate > 0
+                or self.delay_pull_rate > 0 or self.corrupt_rate > 0)
+
+
+class FaultSchedule:
+    """Counter-based fault decisions; see module docstring for design."""
+
+    def __init__(self, config: FaultConfig):
+        self.config = config
+
+    def _hit(self, tag: int, rate: float, rnd: int, worker: int) -> bool:
+        if rate <= 0.0:
+            return False
+        rng = np.random.default_rng(
+            [int(self.config.seed), tag, int(rnd), int(worker)])
+        return bool(rng.random() < rate)
+
+    def crashes(self, rnd: int, worker: int) -> bool:
+        return self._hit(_TAG_CRASH, self.config.crash_rate, rnd, worker)
+
+    def drops_push(self, rnd: int, worker: int) -> bool:
+        return self._hit(_TAG_DROP, self.config.drop_push_rate, rnd, worker)
+
+    def delays_pull(self, rnd: int, worker: int) -> bool:
+        return self._hit(_TAG_DELAY, self.config.delay_pull_rate, rnd, worker)
+
+    def corrupts_push(self, rnd: int, worker: int) -> bool:
+        return self._hit(_TAG_CORRUPT, self.config.corrupt_rate, rnd, worker)
+
+    def down(self, rnd: int, worker: int) -> bool:
+        """True if a crash at any round in (rnd - crash_rounds, rnd]
+        leaves the worker still restarting at round ``rnd``."""
+        k = self.config.crash_rounds
+        return any(self.crashes(c, worker)
+                   for c in range(max(1, rnd - k + 1), rnd + 1))
+
+    def push_ok(self, rnd: int, num_parts: int) -> np.ndarray:
+        """(num_parts,) bool mask for the SPMD epoch's push at round
+        ``rnd``: False where the shard's push is lost this round —
+        dropped, corrupted-and-rejected, or owned by a worker inside
+        its crash window.  Host-side; the epoch consumes it as a
+        ``state["push_ok"]`` leaf so the compiled program is fixed."""
+        ok = np.ones(num_parts, dtype=bool)
+        for m in range(num_parts):
+            if (self.drops_push(rnd, m) or self.corrupts_push(rnd, m)
+                    or self.down(rnd, m)):
+                ok[m] = False
+        return ok
+
+
+def attach_fault_state(state: dict, num_parts: int) -> dict:
+    """Add the fault-aware leaves the SPMD epoch threads through
+    ``state``: the per-shard ``push_ok`` mask (refreshed host-side
+    every round via ``FaultSchedule.push_ok``) and the per-shard
+    ``last_push_round`` age table feeding the staleness probe and the
+    ``max_staleness`` watchdog.  Without these keys ``_digest_push``
+    compiles the exact pre-fault program."""
+    state = dict(state)
+    state["push_ok"] = jnp.ones((num_parts,), dtype=bool)
+    state["last_push_round"] = jnp.zeros((num_parts,), dtype=jnp.int32)
+    return state
+
+
+def wire_crc32(rows: np.ndarray) -> int:
+    """Checksum of a wire payload (quantized push rows), as the
+    receiver would compute it before accepting the scatter."""
+    return zlib.crc32(np.ascontiguousarray(rows).tobytes()) & 0xFFFFFFFF
+
+
+def corrupt_rows(rows: np.ndarray, seed: int, rnd: int,
+                 worker: int) -> np.ndarray:
+    """Deterministically bit-flip one byte of a wire payload — the
+    in-flight corruption that the receiver's CRC check must catch."""
+    buf = np.ascontiguousarray(rows).copy()
+    raw = buf.view(np.uint8).reshape(-1)
+    if raw.size == 0:
+        return buf
+    rng = np.random.default_rng([int(seed), _TAG_CORRUPT, int(rnd),
+                                 int(worker), 0x5A])
+    pos = int(rng.integers(raw.size))
+    raw[pos] ^= np.uint8(1 << int(rng.integers(8)))
+    return buf
+
+
+def measured_staleness(last_push_round, rnd) -> jnp.ndarray:
+    """Max age (rounds since last successful push) across shards — the
+    fault-induced component of the Theorem-1 staleness the probe
+    reports."""
+    return jnp.max(jnp.asarray(rnd, jnp.int32)
+                   - jnp.asarray(last_push_round, jnp.int32))
+
+
+def check_schedule(schedule: Optional[FaultSchedule]) -> Optional[FaultSchedule]:
+    """Normalize: None, a disabled schedule → None; else the schedule."""
+    if schedule is None:
+        return None
+    if isinstance(schedule, FaultConfig):
+        schedule = FaultSchedule(schedule)
+    return schedule if schedule.config.enabled else None

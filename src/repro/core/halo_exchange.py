@@ -210,6 +210,12 @@ the store API doubles as a serving contract:
     store operand, so jitting a refresh with ``donate_argnums`` on the
     store reuses its buffers — a serving deployment holds one
     store-sized allocation across refreshes (``serving.make_refresh_fn``).
+  * **Reads degrade, never fail.**  A missed push (dropped, corrupted-
+    and-rejected, or a crashed owner) leaves last-known-good rows in
+    place — see the degraded-pull contract on :func:`pull`; serving's
+    analogue is ``serving.refresh_or_degrade`` (a failed refresh keeps
+    the old version serving, cache intact, counted in
+    ``degraded_refreshes``).
 """
 from __future__ import annotations
 
@@ -411,6 +417,18 @@ def pull(store: dict, slots: jax.Array) -> jax.Array:
 
     slots: (M, H) compact slot ids (sentinel rows at padding).
     Returns (M, L-1, H, hidden) float32.
+
+    Degraded-pull contract (fault tolerance): a pull NEVER fails — it
+    returns whatever rows the store currently holds.  Because pushes
+    are total-row overwrites and a dropped/rejected/crashed push simply
+    writes nothing (masked rows route to the owner's sentinel slot),
+    the rows a faulted owner failed to refresh are its
+    *last-known-good* representations, not zeros or torn blends.  Under
+    the paper's Theorems 1/3 that degradation is just additional
+    staleness; the engines keep it measured (never silent) through the
+    per-slot/per-shard ``last_push_*`` age tables
+    (:mod:`repro.core.faults`) and bound it with the ``max_staleness``
+    watchdog's forced resync.
     """
     out = store["data"][:, slots, :].astype(jnp.float32)   # (L-1, M, H, h)
     if "scale" in store:

@@ -323,6 +323,40 @@ def make_refresh_fn(mesh=None, serve_rows: int = None, donate: bool = True):
     return jax.jit(_refresh, donate_argnums=(0,) if donate else ())
 
 
+def refresh_or_degrade(refresh_fn, store, reps_top, rdata,
+                       stats: dict = None) -> tuple[dict, dict]:
+    """Deploy a refresh; on ANY failure keep serving the old store.
+
+    The degraded-mode contract: a refresh that raises mid-deployment
+    (bad reps shape, placement error, an upstream trainer handing over
+    garbage) must not take serving down — the previous store version
+    keeps answering queries bitwise-identically, and because the
+    version scalar was never bumped, every hot-row cache entry remains
+    valid (the version-compare cache needs no special casing; pinned
+    by tests/test_serving.py).  The failure is *counted*, not hidden:
+    ``stats["degraded_refreshes"]`` increments so operators can alarm
+    on a store that has silently stopped updating.
+
+    Pair with ``make_refresh_fn(donate=False)`` when degradation
+    matters: a donated store argument may have its buffers consumed by
+    the very call that fails, leaving nothing to keep serving from.
+
+    Returns ``(store, stats)`` — the new store on success, the old one
+    on failure; ``stats`` gains ``refreshes``/``degraded_refreshes``
+    counts (a fresh dict when None is passed).
+    """
+    stats = dict(stats) if stats else {"refreshes": 0,
+                                       "degraded_refreshes": 0}
+    try:
+        new = refresh_fn(store, reps_top, rdata)
+        jax.block_until_ready(new)
+    except Exception:
+        stats["degraded_refreshes"] += 1
+        return store, stats
+    stats["refreshes"] += 1
+    return new, stats
+
+
 # ---------------------------------------------------------------------------
 # Hot-row cache
 # ---------------------------------------------------------------------------

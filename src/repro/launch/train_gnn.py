@@ -72,6 +72,12 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
         # Control-variate history (M, L-1, S, hidden): each device keeps
         # its own subgraphs' last-step representations — never exchanged.
         state_sh["hist"] = slab_shard
+    if "push_ok" in state:
+        # Fault-aware leaves (repro.core.faults.attach_fault_state):
+        # per-shard (M,) push mask + last-push age table — sharded like
+        # the subgraphs they gate.
+        state_sh["push_ok"] = m_shard
+        state_sh["last_push_round"] = m_shard
     return data_sh, state_sh
 
 
@@ -86,6 +92,40 @@ def batch_shardings(mesh) -> dict:
     mdim = axes if len(axes) > 1 else axes[0]
     m_shard = NamedSharding(mesh, P(mdim))
     return {k: m_shard for k in ("seed_mask", "edge_scale", "edge_keep")}
+
+
+def _push_ok(schedule, rnd: int, num_parts: int):
+    import jax.numpy as jnp
+    import numpy as np
+    ok = (schedule.push_ok(rnd, num_parts) if schedule is not None
+          else np.ones(num_parts, dtype=bool))
+    return jnp.asarray(ok)
+
+
+def _maybe_resume(args, state) -> int:
+    """Epoch/step to start from: the newest valid checkpoint's, or 0."""
+    if not args.resume:
+        return 0
+    from repro.checkpoint import latest_step
+    step = latest_step(args.ckpt_dir)
+    if step is None:
+        print(f"resume: no valid checkpoint in {args.ckpt_dir}, "
+              f"starting fresh")
+        return 0
+    return int(step)
+
+
+def _restore(args, state):
+    from repro.checkpoint import restore_checkpoint
+    state, step = restore_checkpoint(args.ckpt_dir, state)
+    print(f"resume: restored step {step} from {args.ckpt_dir}")
+    return state, step
+
+
+def _maybe_ckpt(args, step: int, state) -> None:
+    if args.ckpt_dir and args.ckpt_every and step % args.ckpt_every == 0:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt_dir, step, state)
 
 
 def main():
@@ -169,7 +209,39 @@ def main():
     ap.add_argument("--no-gat-dedup", action="store_true",
                     help="disable the GAT owner-shard projection dedup "
                          "(legacy per-subgraph halo projection)")
+    ap.add_argument("--fault-crash-rate", type=float, default=0.0,
+                    help="deterministic fault injection: per-(round, "
+                         "worker) probability a shard's owner is inside "
+                         "a crash window (its pushes are lost for "
+                         "crash_rounds rounds; store keeps last-known-"
+                         "good rows)")
+    ap.add_argument("--fault-drop-rate", type=float, default=0.0,
+                    help="probability a push round's wire transfer is "
+                         "dropped for a shard")
+    ap.add_argument("--fault-corrupt-rate", type=float, default=0.0,
+                    help="probability a push payload is corrupted in "
+                         "flight and CRC-rejected by the receiver "
+                         "(observable effect = a drop)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the FaultSchedule (decisions are a "
+                         "pure function of (seed, class, round, part) — "
+                         "replayable)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="bounded-staleness watchdog: force-push any "
+                         "shard whose last accepted push is this many "
+                         "rounds old (Theorem-1/3 bound under faults)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for atomic checksummed checkpoints "
+                         "of the full training state")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N epochs/steps (0 = never)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest VALID checkpoint from "
+                         "--ckpt-dir (partial/corrupt ones are skipped) "
+                         "and continue to --epochs")
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir")
 
     g = make_dataset(args.dataset, scale=args.scale)
     t_part = time.perf_counter()
@@ -194,7 +266,19 @@ def main():
         sync_interval=args.interval, mode="digest", pull_mode=args.pull,
         precision=HaloPrecision(args.precision,
                                 error_feedback=args.error_feedback),
-        sample_estimator=args.estimator)
+        sample_estimator=args.estimator,
+        max_staleness=args.max_staleness)
+    from repro.core import faults as faults_mod
+    schedule = faults_mod.check_schedule(faults_mod.FaultConfig(
+        seed=args.fault_seed, crash_rate=args.fault_crash_rate,
+        drop_push_rate=args.fault_drop_rate,
+        corrupt_rate=args.fault_corrupt_rate))
+    fault_aware = schedule is not None or args.max_staleness is not None
+    if schedule is not None:
+        print(f"faults: crash={args.fault_crash_rate} "
+              f"drop={args.fault_drop_rate} "
+              f"corrupt={args.fault_corrupt_rate} seed={args.fault_seed} "
+              f"max_staleness={args.max_staleness}")
     mesh = make_host_mesh(data=args.data_axis, model=1, pod=args.pods)
     if args.pull == "collective":
         # Fail fast with the M-vs-mesh mismatch spelled out (the epoch
@@ -219,25 +303,48 @@ def main():
               f"estimator={args.estimator}")
         state = init_sampled_state(cfg, opt, data,
                                    precision=settings.precision)
+        if fault_aware:
+            state = faults_mod.attach_fault_state(state, args.parts)
+        start = _maybe_resume(args, state)
+        if start:
+            state, _ = _restore(args, state)
         data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
         step_fn = jax.jit(
             make_sampled_epoch_fn(cfg, opt, settings, mesh=mesh),
             in_shardings=(state_sh, data_sh, batch_shardings(mesh)))
         t0 = time.perf_counter()
-        for t in range(args.epochs):
+        m = {"loss": float("nan")}
+        for t in range(start, args.epochs):
+            if fault_aware:
+                state["push_ok"] = _push_ok(schedule, t + 1, args.parts)
             batch = {k: jax.numpy.asarray(v)
                      for k, v in sampler.sample(t).items()}
             state, m = step_fn(state, tdata, batch)
+            _maybe_ckpt(args, t + 1, state)
         ev = evaluate(cfg, state["params"], tdata)
     else:
         state = init_state(cfg, opt, data, precision=settings.precision)
+        if fault_aware:
+            state = faults_mod.attach_fault_state(state, args.parts)
+        start = _maybe_resume(args, state)
+        if start:
+            state, _ = _restore(args, state)
         data_sh, state_sh = subgraph_shardings(tdata, state, mesh)
         epoch_fn = jax.jit(make_epoch_fn(cfg, opt, settings, mesh=mesh),
                            in_shardings=(state_sh, data_sh))
         t0 = time.perf_counter()
-        for e in range(args.epochs):
+        m = {"loss": float("nan")}
+        for e in range(start, args.epochs):
+            if fault_aware:
+                state["push_ok"] = _push_ok(schedule, e + 1, args.parts)
             state, m = epoch_fn(state, tdata)
+            _maybe_ckpt(args, e + 1, state)
         ev = evaluate(cfg, state["params"], tdata)
+    if fault_aware and "last_push_round" in state:
+        import numpy as np
+        age = int(state["epoch"]) - np.asarray(state["last_push_round"])
+        print(f"fault staleness: max push age {int(age.max())} round(s) "
+              f"(bound {args.max_staleness})")
     sync = spec.comm_bytes(sp.pull_rows(), sp.push_rows())
     wl = data["_worklist"]
     print(f"mesh={dict(mesh.shape)} epochs={args.epochs} "

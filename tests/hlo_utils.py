@@ -142,15 +142,18 @@ def expected_all_to_all(storage: str, model: str = "gcn",
 def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",
                pull_mode: str = "collective", model: str = "gcn",
                hidden: int = 32, sync_interval: int = 2,
-               error_feedback: bool = False):
+               error_feedback: bool = False, fault_state: bool = False,
+               max_staleness: int = None):
     """Build (jitted_epoch_fn, state, tdata) for graph ``g``.
 
     With ``mesh`` the epoch is jitted with the production shardings
     (store slot-sharded, (M, ...) arrays over "data"); without it the
-    plain single-device program is returned.
+    plain single-device program is returned.  ``fault_state`` attaches
+    the fault-injection leaves (``push_ok`` / ``last_push_round``) so
+    the fault-aware program's census can be compared to the plain one.
     """
-    from repro.core import (TrainSettings, init_state, make_epoch_fn,
-                            prepare_graph_data)
+    from repro.core import (TrainSettings, attach_fault_state, init_state,
+                            make_epoch_fn, prepare_graph_data)
     from repro.core.halo_exchange import HaloPrecision
     from repro.launch.train_gnn import subgraph_shardings
     from repro.models.gnn import GNNConfig
@@ -164,8 +167,11 @@ def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",
     opt = adam(5e-3)
     settings = TrainSettings(
         sync_interval=sync_interval, mode="digest", pull_mode=pull_mode,
-        precision=HaloPrecision(storage, error_feedback=error_feedback))
+        precision=HaloPrecision(storage, error_feedback=error_feedback),
+        max_staleness=max_staleness)
     state = init_state(cfg, opt, data, precision=settings.precision)
+    if fault_state:
+        state = attach_fault_state(state, num_parts)
     if mesh is None:
         fn = jax.jit(make_epoch_fn(cfg, opt, settings))
     else:

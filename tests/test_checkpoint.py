@@ -38,6 +38,69 @@ def test_missing_dir_raises(tmp_path):
         restore_checkpoint(str(tmp_path / "nope"), {"x": jnp.zeros(1)})
 
 
+def test_truncated_npz_falls_back_to_previous(tmp_path):
+    """Regression: a torn write of the NEWEST payload (crash mid-save,
+    bit rot) must not take resume down — ``latest_step`` skips it and
+    returns the previous *valid* checkpoint, while ``verify_checkpoint``
+    reports the corruption as a typed error."""
+    import os
+
+    from repro.checkpoint import CheckpointCorruptError, verify_checkpoint
+
+    tree = {"x": jnp.arange(4096.0)}
+    save_checkpoint(str(tmp_path), 3, tree)
+    save_checkpoint(str(tmp_path), 6, tree)
+    npz = tmp_path / "ckpt_00000006.npz"
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+
+    with pytest.raises(CheckpointCorruptError):
+        verify_checkpoint(str(tmp_path), 6)
+    assert latest_step(str(tmp_path)) == 3
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3
+    np.testing.assert_array_equal(restored["x"], tree["x"])
+
+
+def test_checksum_mismatch_detected(tmp_path):
+    """Payload bytes that load fine but don't match the manifest's
+    CRC32s (e.g. the wrong file restored from backup) are rejected."""
+    import shutil
+
+    from repro.checkpoint import CheckpointCorruptError, verify_checkpoint
+
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros((8,))})
+    save_checkpoint(str(tmp_path), 2, {"x": jnp.ones((8,))})
+    # Same key set, different contents: only the checksums can tell.
+    shutil.copy(tmp_path / "ckpt_00000001.npz", tmp_path / "ckpt_00000002.npz")
+    with pytest.raises(CheckpointCorruptError, match="CRC32"):
+        verify_checkpoint(str(tmp_path), 2)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_corrupt_manifest_and_partial_writes_skipped(tmp_path):
+    import os
+
+    from repro.checkpoint import CheckpointCorruptError, read_manifest
+
+    tree = {"x": jnp.zeros((4,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # Manifest garbage → typed error, not a JSON traceback.
+    save_checkpoint(str(tmp_path), 4, tree)
+    (tmp_path / "ckpt_00000004.json").write_text("{not json")
+    with pytest.raises(CheckpointCorruptError):
+        read_manifest(str(tmp_path), 4)
+    # Manifest published but npz missing (crash between the replaces).
+    save_checkpoint(str(tmp_path), 5, tree)
+    os.unlink(tmp_path / "ckpt_00000005.npz")
+    # npz without a manifest (manifest deleted / pre-manifest layout).
+    save_checkpoint(str(tmp_path), 6, tree)
+    os.unlink(tmp_path / "ckpt_00000006.json")
+    assert latest_step(str(tmp_path)) == 1
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+
+
 def test_bf16_store_roundtrip(tmp_path):
     """bfloat16 leaves (ml_dtypes extension type) survive npz via the f32
     widening path and restore back to bf16 losslessly."""

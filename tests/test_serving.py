@@ -198,6 +198,53 @@ def test_refresh_bumps_version_every_time():
     assert int(store["version"]) == 2
 
 
+def test_refresh_failure_keeps_old_version_serving():
+    """Degraded mode: a refresh that raises mid-deployment (here: a
+    trainer handing over wrong-width reps) must leave the OLD store
+    version serving bitwise-identical logits, with every hot-row cache
+    entry still valid — the version scalar never bumped, so the
+    version-compare cache keeps hitting — and the failure counted in
+    ``degraded_refreshes``."""
+    g, data, plan = _setup()
+    cfg, params = _model("gcn")
+    _, params2 = _model("gcn", key=7)
+    scfg = serving.ServeConfig(batch_size=64, cache_rows=512)
+    store = _fresh_store(plan, cfg, params, data)
+    # donate=False: a failed deployment must not have consumed the old
+    # store's buffers (see refresh_or_degrade's docstring).
+    refresh = serving.make_refresh_fn(donate=False)
+    qdata, rdata = plan.query_data(), plan.refresh_data()
+    cache = serving.init_cache(scfg, cfg.num_classes)
+    ref, cache = _serve_all(cfg, scfg, params, store, cache, qdata,
+                            g.num_nodes)
+    version = int(store["version"])
+
+    bad_reps = top_layer_reps(cfg, params2, data)[:, :-1]  # wrong width
+    store, stats = serving.refresh_or_degrade(refresh, store, bad_reps,
+                                              rdata)
+    assert stats["degraded_refreshes"] == 1 and stats["refreshes"] == 0
+    assert int(store["version"]) == version  # never bumped
+
+    # Old version keeps serving, bitwise, and the warm cache still hits
+    # (no invalidation happened).
+    hits_before = int(cache["hits"])
+    served, cache = _serve_all(cfg, scfg, params, store, cache, qdata,
+                               g.num_nodes)
+    np.testing.assert_array_equal(served, ref)
+    assert int(cache["hits"]) > hits_before
+
+    # The next good deployment goes through and is counted normally.
+    good = top_layer_reps(cfg, params2, data)
+    store, stats = serving.refresh_or_degrade(refresh, store, good, rdata,
+                                              stats)
+    assert stats == {"refreshes": 1, "degraded_refreshes": 1}
+    assert int(store["version"]) == version + 1
+    served2, _ = _serve_all(cfg, scfg, params2, store, cache, qdata,
+                            g.num_nodes)
+    ref2 = np.asarray(full_graph_forward(cfg, params2, data)[0])
+    np.testing.assert_array_equal(served2, ref2[:g.num_nodes])
+
+
 # ---------------------------------------------------------------------------
 # Jit-cache keying (static ServeConfig)
 # ---------------------------------------------------------------------------
