@@ -4,7 +4,7 @@ CPU wall-time cannot show multi-device scaling, so this uses the §3.3
 analytic epoch-time model (v5e constants) on the partitioned graph —
 per-worker compute shrinks with M while DIGEST's sync cost is amortized."""
 from benchmarks.common import bench_scale, emit
-from repro.core import epoch_time_model, prepare_graph_data
+from repro.core import epoch_time_model
 from repro.graph import build_partitions, make_dataset
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import param_count

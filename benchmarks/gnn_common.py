@@ -3,8 +3,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (AsyncSettings, TrainSettings, digest_a_train,
-                        digest_train, prepare_graph_data)
+from repro.core import (AsyncSettings, PredictorConfig, TrainSettings,
+                        digest_a_train, digest_train, prepare_graph_data)
 from repro.graph import make_dataset
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
@@ -28,8 +28,13 @@ def setup(dataset: str, model: str = "gcn", num_parts: int = 4,
 
 
 def train_mode(cfg, data, mode: str, epochs: int, interval: int = 10,
-               seed: int = 0):
-    """Returns (history, wall_seconds, per-epoch seconds)."""
+               seed: int = 0, predictor: PredictorConfig = None):
+    """Returns (history, wall_seconds, per-epoch seconds).
+
+    ``predictor`` threads a SAT staleness-prediction config into the
+    DIGEST modes (digest / digest_a); None means raw stale pulls.
+    """
+    predictor = predictor or PredictorConfig()
     t0 = time.perf_counter()
     if mode == "llcg":
         _, hist = digest_train(
@@ -39,13 +44,15 @@ def train_mode(cfg, data, mode: str, epochs: int, interval: int = 10,
             epochs=epochs, eval_every=max(epochs // 4, 1), seed=seed)
     elif mode == "digest_a":
         _, hist = digest_a_train(
-            cfg, adam(5e-3), data, AsyncSettings(sync_interval=interval),
+            cfg, adam(5e-3), data,
+            AsyncSettings(sync_interval=interval, predictor=predictor),
             total_rounds=epochs * data["halo_ids"].shape[0],
             eval_every_rounds=max(epochs // 2, 1), seed=seed)
     else:
         _, hist = digest_train(
             cfg, adam(5e-3), data,
-            TrainSettings(sync_interval=interval, mode=mode),
+            TrainSettings(sync_interval=interval, mode=mode,
+                          predictor=predictor),
             epochs=epochs, eval_every=max(epochs // 4, 1), seed=seed)
     wall = time.perf_counter() - t0
     return hist, wall, wall / max(epochs, 1)

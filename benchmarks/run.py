@@ -16,7 +16,8 @@ from benchmarks.common import emit
 BENCHES = ["table1_f1_speedup", "fig3_curves", "fig4_time_per_epoch",
            "fig5_scalability", "fig6_sync_interval", "fig7_straggler",
            "fig9_memory_ratio", "thm1_error_bound", "comm_complexity",
-           "kernel_bench", "serve_bench", "sampling_variance"]
+           "kernel_bench", "serve_bench", "sampling_variance",
+           "sat_prediction"]
 
 
 def main() -> int:

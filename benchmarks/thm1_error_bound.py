@@ -28,6 +28,29 @@ def run() -> list[dict]:
             "eps_max": round(max(res["eps"]), 4),
             "grad_norm": round(res["grad_norm_fresh"], 4),
         })
+    # SAT predictor: the stale side becomes dequant(store)+γ·dequant
+    # (pstore); ε is the residual staleness the predictor leaves, and
+    # eps_raw the uncorrected ε the same store would serve (Fig. 6's
+    # comparison axis — residual ≤ raw is the bench-regression gate).
+    from repro.core import PredictorConfig
+    for interval in (10, 20):
+        st, _ = digest_train(
+            cfg, adam(5e-3), data,
+            TrainSettings(sync_interval=interval,
+                          predictor=PredictorConfig(kind="ema")),
+            epochs=max(int(30 * scale), 10), eval_every=100)
+        res = measure_error_and_bound(
+            cfg, st["params"], data, st["store"], pstore=st["pstore"])
+        rows.append({
+            "name": f"thm1/N={interval}-sat",
+            "us_per_call": "",
+            "err_measured": round(res["err_measured"], 6),
+            "bound": round(res["bound"], 2),
+            "holds": res["err_measured"] <= res["bound"],
+            "eps_max": round(max(res["eps"]), 4),
+            "eps_raw_max": round(max(res["eps_raw"]), 4),
+            "grad_norm": round(res["grad_norm_fresh"], 4),
+        })
     # Quantized storage: the corrected bound carries the explicit
     # scale/2·√d (int8) / ulp (bf16) term on top of the measured ε.
     for storage in ("bf16", "int8"):

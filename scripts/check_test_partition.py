@@ -1,0 +1,90 @@
+"""Fail the build unless the CI legs exactly partition the test files.
+
+The tier-1 matrix legs in .github/workflows/ci.yml select tests with
+``pytest -m leg_<name>`` markers stamped from the tests/ci_legs.py
+registry.  This script is the completeness gate behind that scheme:
+
+  * the registry's per-leg file sets are pairwise disjoint;
+  * every file the registry names exists under tests/;
+  * every ``tests/test_*.py`` file maps to exactly one leg (files not
+    claimed by a dedicated leg belong to the default collective-8dev
+    leg);
+  * an explicit ``pytestmark = pytest.mark.leg("...")`` declaration in
+    a test file agrees with the registry — and every file a dedicated
+    leg owns carries one, so ownership is visible in the file itself.
+
+Pure source-level checks — no jax, no pytest plugins — so it runs in
+the lint job in seconds.
+
+  PYTHONPATH=src python scripts/check_test_partition.py
+"""
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+TESTS = REPO / "tests"
+sys.path.insert(0, str(TESTS))
+
+from ci_legs import DEFAULT_LEG, LEGS, leg_for  # noqa: E402
+
+_LEG_MARK = re.compile(
+    r"^pytestmark\s*=.*pytest\.mark\.leg\(\s*['\"]([^'\"]+)['\"]\s*\)",
+    re.MULTILINE)
+
+
+def main() -> int:
+    errors = []
+    stems = sorted(p.stem for p in TESTS.glob("test_*.py"))
+
+    # Registry names only real files, and no file is claimed twice.
+    claimed = {}
+    for leg, files in sorted(LEGS.items()):
+        for stem in sorted(files):
+            if stem not in stems:
+                errors.append(f"{leg}: registry names missing file "
+                              f"tests/{stem}.py")
+            if stem in claimed:
+                errors.append(f"tests/{stem}.py claimed by both "
+                              f"'{claimed[stem]}' and '{leg}'")
+            claimed[stem] = leg
+
+    # Every test file lands on exactly one leg, and any in-file
+    # declaration matches; dedicated-leg files must declare.
+    partition = {leg: [] for leg in [DEFAULT_LEG, *LEGS]}
+    for stem in stems:
+        try:
+            leg = leg_for(stem)
+        except ValueError as e:            # duplicate claim (redundant
+            errors.append(str(e))          # with the loop above, kept
+            continue                       # for leg_for's own contract)
+        partition[leg].append(stem)
+        declared = _LEG_MARK.findall((TESTS / f"{stem}.py").read_text())
+        if len(declared) > 1:
+            errors.append(f"tests/{stem}.py declares multiple leg "
+                          f"markers: {declared}")
+        elif declared and declared[0] != leg:
+            errors.append(f"tests/{stem}.py declares leg "
+                          f"'{declared[0]}' but the registry assigns "
+                          f"'{leg}'")
+        elif not declared and leg != DEFAULT_LEG:
+            errors.append(f"tests/{stem}.py is owned by '{leg}' but "
+                          f"carries no pytestmark leg declaration")
+
+    for leg, files in partition.items():
+        print(f"{leg} ({len(files)}):")
+        for stem in files:
+            print(f"  tests/{stem}.py")
+    if errors:
+        print("\nPARTITION VIOLATIONS:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    total = sum(len(v) for v in partition.values())
+    print(f"\nOK: {total} test files partitioned across "
+          f"{len(partition)} legs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,6 @@ Single-pod cases get the dual (scan + unrolled) pass for true roofline
 costs; multi-pod cases prove lowering/sharding coherence with the fast
 scan pass (costs rescaled by layer count).
 """
-import itertools
 import json
 import os
 import subprocess

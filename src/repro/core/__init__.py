@@ -22,6 +22,8 @@ from repro.core.serving import (ServeConfig, ServePlan, build_serve_plan,
                                 refresh_or_degrade, serve_query,
                                 serve_query_sharded)
 from repro.core import stale_store
+from repro.core import predictor
+from repro.core.predictor import PredictorConfig
 
 __all__ = [
     "MODES", "TrainSettings", "check_collective_geometry",
@@ -40,4 +42,5 @@ __all__ = [
     "serving", "ServeConfig", "ServePlan", "build_serve_plan",
     "init_serve_store", "make_refresh_fn", "refresh_or_degrade",
     "serve_query", "serve_query_sharded",
+    "predictor", "PredictorConfig",
 ]

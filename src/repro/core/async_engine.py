@@ -26,8 +26,10 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt_io
 from repro.core import faults as faults_mod
 from repro.core import halo_exchange
+from repro.core import predictor as predictor_mod
 from repro.core.digest import (check_worklist_geometry, evaluate,
                                make_subgraph_loss)
+from repro.core.predictor import PredictorConfig
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import init_params
 from repro.optim import Optimizer
@@ -64,6 +66,13 @@ class AsyncSettings:
     # latest computed representations are force-applied to the store
     # (a blocking resync) before the pull proceeds.  None disables.
     max_staleness: Optional[int] = None
+    # SAT staleness-alleviated prediction (repro.core.predictor): every
+    # ACCEPTED push (warm start, cadence, retries, forced resyncs)
+    # advances the owner's history and writes the delta rows into a
+    # second store-shaped pstore; pulls then read
+    # dequant(store) + γ·dequant(pstore).  kind="none" leaves the
+    # simulator bitwise identical to a predictor-free run.
+    predictor: PredictorConfig = PredictorConfig()
 
 
 def store_geometry(data: dict) -> tuple[int, int]:
@@ -191,6 +200,30 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     push_residual = [jnp.zeros((L1, S, cfg.hidden_dim), jnp.float32)
                      for _ in range(M)]
 
+    # SAT predictor state: a second store-shaped pstore + per-worker
+    # history (leading axis 1 — update_history's part axis), advanced on
+    # every ACCEPTED push so the sequence matches the SPMD engine's
+    # shard-local one exactly (pure in the accepted-push sequence).
+    pcfg = settings.predictor
+    pred = pcfg.enabled and cfg.num_layers > 1
+    pstore = (halo_exchange.init_store(L1, num_slots, cfg.hidden_dim,
+                                       settings.precision)
+              if pred else None)
+    phist = ([predictor_mod.init_history(1, L1, S, cfg.hidden_dim)
+              for _ in range(M)] if pred else None)
+
+    def apply_accepted_push(m: int, reps):
+        """History transition + pstore scatter for one accepted push of
+        worker m — warm start, cadence pushes, retries and forced
+        resyncs all flow through here (and ONLY accepted ones, so a
+        degraded shard's history freezes at last-known-good)."""
+        nonlocal pstore
+        phist[m], prows = predictor_mod.update_history(
+            phist[m], reps[None], jnp.ones((1,), bool), pcfg)
+        pstore = halo_exchange.owner_push(
+            pstore, jnp.asarray(m, jnp.int32), data["local_slots"][m],
+            data["local_valid"][m], prows[0], shard_rows)
+
     x_local_all = np.asarray(data["x_global"])[np.asarray(data["local_ids"])]
     x_halo_all = np.asarray(data["x_global"])[np.asarray(data["halo_ids"])]
 
@@ -247,6 +280,8 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
             else:
                 store = push_rows(store, owner, data["local_slots"][m],
                                   data["local_valid"][m], push0)
+            if pred:
+                apply_accepted_push(m, push0)
             last_reps[m] = push0
             has_reps[m] = True
             last_push_step[ls_np[m][lv_np[m]]] = 0
@@ -287,9 +322,10 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         round-trips as two (M,) arrays; heapify of the same multiset
         pops in the same (time, worker) order."""
         hsort = sorted(heap)
+        extra = ({"pstore": pstore, "phist": phist} if pred else {})
         return {
             "params": params, "opt_state": opt_state, "store": store,
-            "step": step,
+            "step": step, **extra,
             "halo_cache": halo_cache, "push_residual": push_residual,
             "snapshots": params_snapshots,
             "worker_round": worker_round, "snapshot_step": snapshot_step,
@@ -310,6 +346,9 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         params, opt_state, store = (tree["params"], tree["opt_state"],
                                     tree["store"])
         step = jnp.asarray(tree["step"], jnp.int32)
+        if pred:
+            pstore = tree["pstore"]
+            phist = list(tree["phist"])
         halo_cache = list(tree["halo_cache"])
         push_residual = list(tree["push_residual"])
         params_snapshots = list(tree["snapshots"])
@@ -358,6 +397,8 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
         else:
             store = push_rows(store, owner, data["local_slots"][m],
                               data["local_valid"][m], reps)
+        if pred:
+            apply_accepted_push(m, reps)
         last_push_step[ls_np[m][lv_np[m]]] = int(step)
         return store, residual, True
 
@@ -419,6 +460,9 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
                                     store = push_rows(
                                         store, owner, data["local_slots"][o],
                                         data["local_valid"][o], last_reps[o])
+                                if pred:
+                                    apply_accepted_push(int(o),
+                                                        last_reps[o])
                                 last_push_step[ls_np[o][lv_np[o]]] = int(step)
                                 push_failed[o] = False
                                 fail_count[o] = 0
@@ -429,6 +473,13 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
                                            int(ages[hv].max()))
                 pulled = halo_exchange.pull(
                     store, data["halo_slots"][m][None])[0]
+                if pred:
+                    # SAT: serve the predicted rows.  A never-pushed
+                    # slot is zero in BOTH stores, so the cold-row
+                    # probe below still sees exact zeros.
+                    pulled = pulled + (
+                        jnp.float32(pcfg.gamma) * halo_exchange.pull(
+                            pstore, data["halo_slots"][m][None])[0])
                 # Cold-store probe: a valid halo row that is all-zero
                 # across every layer was never pushed (legitimately-
                 # pushed rows are post-relu representations of a real
@@ -517,6 +568,8 @@ def digest_a_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     state = {"params": params, "opt_state": opt_state, "store": store,
              "step": step, "fault_counters": counters,
              "pull_age_max": pull_age_max}
+    if pred:
+        state["pstore"] = pstore
     return state, hist
 
 

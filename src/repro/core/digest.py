@@ -55,7 +55,9 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt_io
 from repro.core import faults as faults_mod
 from repro.core import halo_exchange
+from repro.core import predictor as predictor_mod
 from repro.core.halo_exchange import HaloPrecision
+from repro.core.predictor import PredictorConfig
 from repro.graph.graph import Graph
 from repro.graph.partition import StackedPartitions, build_partitions
 from repro.kernels.spmm import BLOCK_ROWS, STREAM_CHUNK_ROWS
@@ -217,7 +219,8 @@ def check_collective_geometry(data: dict, mesh, axis: str = "data") -> int:
 
 
 def project_store_tables(store: dict, params: Pytree, cfg: GNNConfig,
-                         precision: HaloPrecision) -> dict:
+                         precision: HaloPrecision, pstore: dict = None,
+                         gamma: float = 1.0) -> dict:
     """GAT owner-shard projection dedup: project the *store*, not the slabs.
 
     For every hidden layer ℓ, computes ``z{ℓ} = dequant(store[ℓ]) · W_{ℓ+1}``
@@ -233,12 +236,22 @@ def project_store_tables(store: dict, params: Pytree, cfg: GNNConfig,
     projected rows then ship through the *same* pull routing as raw rows.
     Shipping ``heads·dh``-wide projected rows also shrinks pull bytes
     whenever ``heads·head_dim < hidden``.
+
+    With a SAT predictor history (``pstore``/``gamma`` — see
+    ``repro.core.predictor``) the rows are staleness-alleviated BEFORE
+    the projection: ``(h̃ + γ·δ)·W = h̃·W + γ·δ·W`` by linearity, so the
+    dedup path gets prediction at zero extra wire tensors — the z-cache
+    structure (and the pull census) is unchanged.
     """
     out = {}
     for ell in range(cfg.num_layers - 1):
         w = params[f"layer_{ell + 1}"]["w"]        # (hidden, heads, dh)
         tab, sc = halo_exchange.layer_table(store, ell)
         rows = halo_exchange.dequantize_rows(tab, sc)       # (R, hidden)
+        if pstore is not None:
+            ptab, psc = halo_exchange.layer_table(pstore, ell)
+            rows = rows + (jnp.float32(gamma)
+                           * halo_exchange.dequantize_rows(ptab, psc))
         z = jnp.einsum("rd,dhk->rhk", rows, w)
         z = z.reshape(z.shape[0], -1)                       # (R, heads·dh)
         q, qs = halo_exchange.quantize_rows(z, precision)
@@ -349,6 +362,14 @@ class TrainSettings:
     # Requires the fault-aware state leaves (faults.attach_fault_state);
     # None disables the watchdog.
     max_staleness: Optional[int] = None
+    # Staleness-alleviated embedding prediction (SAT; see
+    # repro.core.predictor): consumers read ``dequant(store row) +
+    # γ·dequant(pstore row)`` where the pstore carries each row's
+    # last-sync delta (or its β-EMA), maintained shard-locally at push
+    # time and exchanged through the exact same pull routing as the
+    # store.  ``kind="none"`` creates NO extra leaves and compiles the
+    # bitwise-identical predictor-free program.
+    predictor: PredictorConfig = PredictorConfig()
 
 
 def _digest_pull(cfg: GNNConfig, settings: TrainSettings, state: dict,
@@ -358,11 +379,19 @@ def _digest_pull(cfg: GNNConfig, settings: TrainSettings, state: dict,
     ``sync_interval`` epochs.  ONE implementation shared by the
     full-batch epoch and the sampled step — both therefore compile to
     the identical collective routing (the ragged all_to_all census the
-    HLO tests pin is a property of this function, not of the caller)."""
+    HLO tests pin is a property of this function, not of the caller).
+
+    Returns ``(cache, pcache)``: the stale slab plus the pulled SAT
+    predictor slab (``None`` unless the predictor is enabled on a
+    non-dedup model — the pstore rides the same routing, one extra
+    exchange per store tensor).  Under the GAT dedup the prediction is
+    folded into :func:`project_store_tables` *before* projection, so
+    the z-cache and the pull census stay exactly as without it."""
     halo_size = data["halo_ids"].shape[1]
     do_pull = (r % settings.sync_interval == 0)
     if settings.pull_on_first_epoch:
         do_pull = do_pull | (r == 1)
+    pred = settings.predictor.enabled and "pstore" in state
     if settings.pull_mode == "collective":
         def _pull_store(zs):
             return halo_exchange.collective_pull(
@@ -378,16 +407,22 @@ def _digest_pull(cfg: GNNConfig, settings: TrainSettings, state: dict,
             new_cache = {}
             for key, zs in project_store_tables(
                     state["store"], state["params"], cfg,
-                    settings.precision).items():
+                    settings.precision,
+                    pstore=state["pstore"] if pred else None,
+                    gamma=settings.predictor.gamma).items():
                 slab = _pull_store(zs)
                 new_cache[key] = slab["data"]
                 if "scale" in slab:
                     new_cache[f"{key}_scale"] = slab["scale"]
-            return new_cache
+            return new_cache, state.get("pcache")
+    elif pred:
+        def _pull():
+            return _pull_store(state["store"]), _pull_store(state["pstore"])
     else:
         def _pull():
-            return _pull_store(state["store"])
-    return jax.lax.cond(do_pull, _pull, lambda: state["cache"])
+            return _pull_store(state["store"]), None
+    return jax.lax.cond(do_pull, _pull,
+                        lambda: (state["cache"], state.get("pcache")))
 
 
 def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
@@ -414,16 +449,30 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
     resync the Theorem-1/3 bounded-staleness analysis needs).  Without
     the fault leaves the exact pre-fault program compiles.
 
-    Returns (store, push_residual, eps, last_push_round)."""
+    With the SAT predictor enabled this also advances the push-side
+    history (``state["predictor"]``, gated by the SAME per-part ok mask
+    as the store push, so fault-masked shards freeze and degraded pulls
+    extrapolate from the last-known-good delta), scatters the resulting
+    delta rows into the pstore through the identical push path, and
+    measures eps against the *predicted* rows — the residual staleness
+    error consumers actually see — via a virtual fp32 store
+    ``dequant(store) + γ·dequant(pstore)`` (elementwise, so the probe's
+    shard-local reads are untouched).
+
+    Returns (store, push_residual, eps, last_push_round, pstore,
+    predictor_history)."""
     new_store = state["store"]
     new_residual = state.get("push_residual")
     new_last = state.get("last_push_round")
+    new_pstore = state.get("pstore")
+    new_hist = state.get("predictor")
     eps = jnp.zeros((max(cfg.num_layers - 1, 1),), jnp.float32)
     if settings.mode == "digest" and cfg.num_layers > 1:
         do_push = ((r - 1) % settings.sync_interval == 0)
         num_parts = data["local_slots"].shape[0]
         shard_rows = state["store"]["data"].shape[1] // num_parts
         local_valid = data["local_valid"]
+        ok = jnp.broadcast_to(do_push, (num_parts,))          # (M,)
         if new_last is not None:
             ok = do_push & state["push_ok"]                    # (M,)
             if settings.max_staleness is not None:
@@ -432,9 +481,18 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
             local_valid = local_valid & ok[:, None]
             new_last = jnp.where(ok, jnp.asarray(r, new_last.dtype),
                                  new_last)
+        pred = settings.predictor.enabled and new_pstore is not None
+        eps_store = state["store"]
+        if pred:
+            eps_store = {"data": (
+                halo_exchange.dequantize_rows(
+                    state["store"]["data"], state["store"].get("scale"))
+                + jnp.float32(settings.predictor.gamma)
+                * halo_exchange.dequantize_rows(
+                    state["pstore"]["data"], state["pstore"].get("scale")))}
         if settings.pull_mode == "collective":
             eps = halo_exchange.shard_staleness_error(
-                state["store"], push_reps, data["local_slots"],
+                eps_store, push_reps, data["local_slots"],
                 data["local_boundary"], shard_rows, mesh)
 
             def _push():
@@ -449,7 +507,7 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
                     state["push_residual"], shard_rows, mesh)
         else:
             eps = halo_exchange.staleness_error(
-                state["store"], push_reps, data["local_slots"],
+                eps_store, push_reps, data["local_slots"],
                 data["local_boundary"])
 
             def _push():
@@ -476,7 +534,25 @@ def _digest_push(cfg: GNNConfig, settings: TrainSettings, state: dict,
         else:
             new_store = jax.lax.cond(do_push, _push,
                                      lambda: state["store"])
-    return new_store, new_residual, eps, new_last
+        if pred:
+            # History transition + pstore scatter, gated exactly like
+            # the store push (pure in the accepted-push sequence; no EF
+            # on the pstore — deltas do not telescope across pushes).
+            new_hist, prows = predictor_mod.update_history(
+                state["predictor"], push_reps, ok, settings.predictor)
+            if settings.pull_mode == "collective":
+                def _ppush():
+                    return halo_exchange.shard_push(
+                        state["pstore"], data["local_slots"],
+                        local_valid, prows, shard_rows, mesh)
+            else:
+                def _ppush():
+                    return halo_exchange.push(
+                        state["pstore"], data["local_slots"],
+                        local_valid, prows, data["sentinel_slots"])
+            new_pstore = jax.lax.cond(do_push, _ppush,
+                                      lambda: state["pstore"])
+    return new_store, new_residual, eps, new_last, new_pstore, new_hist
 
 
 def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
@@ -487,6 +563,9 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
         raise ValueError(settings.pull_mode)
     if settings.pull_mode == "collective" and mesh is None:
         raise ValueError("pull_mode='collective' needs the mesh")
+    if settings.predictor.enabled and settings.mode != "digest":
+        raise ValueError("the SAT predictor rides the stale store — "
+                         f"mode must be 'digest', got {settings.mode!r}")
     loss_fn = make_subgraph_loss(cfg)
 
     def epoch_fn(state: dict, data: dict) -> tuple[dict, dict]:
@@ -548,15 +627,20 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                                                     settings.precision)
                 cache = ({"data": q} if sc is None
                          else {"data": q, "scale": sc})
+            pcache = None
         elif settings.mode == "digest":
-            cache = _digest_pull(cfg, settings, state, data, mesh, r)
+            cache, pcache = _digest_pull(cfg, settings, state, data,
+                                         mesh, r)
         else:
             cache = state["cache"]
+            pcache = None
 
         x_local = x_global[data["local_ids"]]               # (M, S, d)
         n_hidden = cfg.num_layers - 1
+        pred_tables = pcache is not None
 
-        def sub_loss(params, x_loc, x_h0, cache_m, struct_m, labels, mask):
+        def sub_loss(params, x_loc, x_h0, cache_m, pcache_m, struct_m,
+                     labels, mask):
             # Layer 0 gathers raw halo features from this subgraph's
             # feature slab; layers ℓ≥1 gather stale reps straight from its
             # pulled storage-precision slab — both via the fused
@@ -575,15 +659,24 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                         zsc[0] if zsc is not None else None,
                         struct_m["out_nbr"], struct_m["out_wts"]))
                 else:
+                    pk = {}
+                    if pred_tables:
+                        # Fused SAT epilogue: the kernel reads
+                        # dequant(stale) + γ·dequant(delta) per row.
+                        ptab, psc = halo_exchange.layer_table(pcache_m,
+                                                              ell)
+                        pk = dict(pdata=ptab, pscale=psc,
+                                  gamma=settings.predictor.gamma)
                     tables.append(halo_ref(
                         *halo_exchange.layer_table(cache_m, ell),
-                        struct_m["out_nbr"], struct_m["out_wts"], *wl))
+                        struct_m["out_nbr"], struct_m["out_wts"], *wl,
+                        **pk))
             return loss_fn(params, x_loc, tables, struct_m, labels, mask)
 
         vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
-                      in_axes=(None, 0, 0, 0, 0, 0, 0))
+                      in_axes=(None, 0, 0, 0, 0, 0, 0, 0))
         (losses, (push_reps, logits)), grads = vg(
-            state["params"], x_local, x_halo0, cache, struct,
+            state["params"], x_local, x_halo0, cache, pcache, struct,
             data["labels"], data["train_mask"])
 
         # Global AGG (Algorithm 1 line 13): uniform average over subgraphs.
@@ -611,8 +704,9 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                 lambda p, g: p - settings.correction_lr * g, params,
                 corr_grads)
 
-        new_store, new_residual, eps, new_last = _digest_push(
-            cfg, settings, state, data, push_reps, mesh, r)
+        (new_store, new_residual, eps, new_last, new_pstore,
+         new_hist) = _digest_push(cfg, settings, state, data, push_reps,
+                                  mesh, r)
 
         train_acc = micro_f1(logits, data["labels"],
                              data["train_mask"].astype(jnp.float32))
@@ -621,6 +715,11 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
                      "epoch": r, "step": state["step"] + 1}
         if new_residual is not None:
             new_state["push_residual"] = new_residual
+        if new_pstore is not None:
+            new_state["pstore"] = new_pstore
+            new_state["predictor"] = new_hist
+        if pcache is not None:
+            new_state["pcache"] = pcache
         metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
                    "staleness_eps": eps}
         if new_last is not None:
@@ -637,7 +736,8 @@ def make_epoch_fn(cfg: GNNConfig, opt: Optimizer, settings: TrainSettings,
 # ---------------------------------------------------------------------------
 
 def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0,
-               precision: HaloPrecision = HaloPrecision()) -> dict:
+               precision: HaloPrecision = HaloPrecision(),
+               predictor: PredictorConfig = PredictorConfig()) -> dict:
     check_worklist_geometry(cfg, data)
     params = init_params(jax.random.PRNGKey(seed), gnn_specs(cfg))
     num_slots = int(data["store_ids"].shape[0]) - 1
@@ -677,6 +777,19 @@ def init_state(cfg: GNNConfig, opt: Optimizer, data: dict, seed: int = 0,
     if precision.error_feedback:
         state["push_residual"] = jnp.zeros((num_parts, l1, s,
                                             cfg.hidden_dim), jnp.float32)
+    if predictor.enabled and cfg.num_layers > 1:
+        # SAT leaves (see repro.core.predictor): the pstore mirrors the
+        # store's slot geometry/precision exactly, so every exchange
+        # helper and the checkpoint layout apply verbatim; the history
+        # rides the push buffers' shape.  The dedup GAT path folds the
+        # prediction before projection and needs no pulled pcache slab.
+        state["pstore"] = halo_exchange.init_store(
+            l1, num_slots, cfg.hidden_dim, precision)
+        state["predictor"] = predictor_mod.init_history(
+            num_parts, l1, s, cfg.hidden_dim)
+        if not gat_projected(cfg):
+            state["pcache"] = halo_exchange.init_slab(
+                num_parts, l1, halo_size, cfg.hidden_dim, precision)
     return state
 
 
@@ -725,7 +838,8 @@ def digest_train(cfg: GNNConfig, opt: Optimizer, data: dict,
     fault_aware = (schedule is not None
                    or settings.max_staleness is not None)
     state = init_state(cfg, opt, data, seed=seed,
-                       precision=settings.precision)
+                       precision=settings.precision,
+                       predictor=settings.predictor)
     if fault_aware:
         state = faults_mod.attach_fault_state(state, num_parts)
     start = 0
@@ -810,9 +924,10 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
                          f"got {settings.sample_estimator!r}")
     use_projected = gat_projected(cfg)
     n_hidden = cfg.num_layers - 1
+    pred_tables = settings.predictor.enabled and not use_projected
 
-    def sub_loss(params, x_loc, x_h0, cache_m, hist_m, struct_m, labels,
-                 smask, escale, ekeep):
+    def sub_loss(params, x_loc, x_h0, cache_m, pcache_m, hist_m, struct_m,
+                 labels, smask, escale, ekeep):
         # Same per-layer halo tables as the full-batch sub_loss; the
         # sampled forward additionally reads the local history rows.
         wl = (struct_m.get("wl_ids"), struct_m.get("wl_cnt"))
@@ -826,9 +941,14 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
                     zsc[0] if zsc is not None else None,
                     struct_m["out_nbr"], struct_m["out_wts"]))
             else:
+                pk = {}
+                if pred_tables and pcache_m is not None:
+                    ptab, psc = halo_exchange.layer_table(pcache_m, ell)
+                    pk = dict(pdata=ptab, pscale=psc,
+                              gamma=settings.predictor.gamma)
                 tables.append(halo_ref(
                     *halo_exchange.layer_table(cache_m, ell),
-                    struct_m["out_nbr"], struct_m["out_wts"], *wl))
+                    struct_m["out_nbr"], struct_m["out_wts"], *wl, **pk))
         tables = [jax.lax.stop_gradient(t) for t in tables]
         hist_tables = [jax.lax.stop_gradient(hist_m[i])
                        for i in range(n_hidden)]
@@ -843,7 +963,7 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
         r = state["epoch"] + 1
         x_global = data["x_global"]
         x_halo0 = x_global[data["halo_ids_x"]]
-        cache = _digest_pull(cfg, settings, state, data, mesh, r)
+        cache, pcache = _digest_pull(cfg, settings, state, data, mesh, r)
         x_local = x_global[data["local_ids"]]
         if settings.sample_estimator == "cv":
             hist = state["hist"]
@@ -851,9 +971,9 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
             hist = jnp.zeros_like(state["hist"])
 
         vg = jax.vmap(jax.value_and_grad(sub_loss, has_aux=True),
-                      in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+                      in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
         (losses, (push_reps, logits)), grads = vg(
-            state["params"], x_local, x_halo0, cache, hist,
+            state["params"], x_local, x_halo0, cache, pcache, hist,
             data["struct"], data["labels"], batch["seed_mask"],
             batch["edge_scale"], batch["edge_keep"])
 
@@ -861,22 +981,27 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
         params, opt_state = opt.update(mean_grads, state["opt_state"],
                                        state["params"], state["step"])
 
-        new_store, new_residual, eps, new_last = _digest_push(
-            cfg, settings, state, data, push_reps, mesh, r)
-
-        # Refresh the local history every step: the padded SPMD step
-        # computes every local row's representation anyway, so the CV
-        # baseline for in-subgraph rows is at most one step stale (the
-        # halo side keeps the sync_interval staleness of the store).
-        new_hist = push_reps if n_hidden > 0 else state["hist"]
+        (new_store, new_residual, eps, new_last, new_pstore,
+         new_hist) = _digest_push(cfg, settings, state, data, push_reps,
+                                  mesh, r)
 
         train_acc = micro_f1(logits, data["labels"],
                              batch["seed_mask"].astype(jnp.float32))
+        # The CV history refreshes every step: the padded SPMD step
+        # computes every local row's representation anyway, so the CV
+        # baseline for in-subgraph rows is at most one step stale (the
+        # halo side keeps the sync_interval staleness of the store).
         new_state = {"params": params, "opt_state": opt_state,
-                     "store": new_store, "cache": cache, "hist": new_hist,
+                     "store": new_store, "cache": cache,
+                     "hist": push_reps if n_hidden > 0 else state["hist"],
                      "epoch": r, "step": state["step"] + 1}
         if new_residual is not None:
             new_state["push_residual"] = new_residual
+        if new_pstore is not None:
+            new_state["pstore"] = new_pstore
+            new_state["predictor"] = new_hist
+        if pcache is not None:
+            new_state["pcache"] = pcache
         metrics = {"loss": jnp.mean(losses), "train_f1": train_acc,
                    "staleness_eps": eps}
         if new_last is not None:
@@ -890,13 +1015,16 @@ def make_sampled_epoch_fn(cfg: GNNConfig, opt: Optimizer,
 
 def init_sampled_state(cfg: GNNConfig, opt: Optimizer, data: dict,
                        seed: int = 0,
-                       precision: HaloPrecision = HaloPrecision()) -> dict:
+                       precision: HaloPrecision = HaloPrecision(),
+                       predictor: PredictorConfig = PredictorConfig()
+                       ) -> dict:
     """:func:`init_state` + the device-local control-variate history
     ``hist`` (M, L-1, S, hidden) fp32 — each subgraph's own-row
     representations from the previous step, zero-initialized like the
     store (unused rows: the in-ELL's padding entries point at the zero
     sentinel, and their residual weights are zero anyway)."""
-    state = init_state(cfg, opt, data, seed=seed, precision=precision)
+    state = init_state(cfg, opt, data, seed=seed, precision=precision,
+                       predictor=predictor)
     num_parts, s = data["local_ids"].shape
     state["hist"] = jnp.zeros(
         (num_parts, cfg.num_layers - 1, s, cfg.hidden_dim), jnp.float32)
@@ -924,7 +1052,8 @@ def sampled_train(cfg: GNNConfig, opt: Optimizer, data: dict, sampler,
     fault_aware = (schedule is not None
                    or settings.max_staleness is not None)
     state = init_sampled_state(cfg, opt, data, seed=seed,
-                               precision=settings.precision)
+                               precision=settings.precision,
+                               predictor=settings.predictor)
     if fault_aware:
         state = faults_mod.attach_fault_state(state, num_parts)
     start = 0

@@ -1,0 +1,170 @@
+"""Staleness-alleviated embedding prediction (SAT) for the halo store.
+
+DIGEST's Theorem-1 error grows linearly with the sync interval because
+consumers read *raw* stale representations.  The authors' follow-up
+(Staleness-Alleviated Distributed GNN Training via Online Dynamic-
+Embedding Prediction, arXiv 2308.13466) predicts the *current* embedding
+from the stale history, recovering accuracy at much wider intervals.
+
+This module is the engine-agnostic core of that predictor:
+
+  * :class:`PredictorConfig` — a frozen, hashable knob (jit-cache key)
+    selecting the history model.  ``kind="delta"`` keeps the last-two-
+    syncs delta (γ = 1 is linear extrapolation of the embedding
+    trajectory; other γ scale the extrapolation step); ``kind="ema"``
+    keeps an exponential moving average of per-sync deltas (β-weighted),
+    which damps oscillating coordinates.  ``kind="none"`` is the
+    contract that matters most: NO predictor leaves exist anywhere, so
+    every compiled program collapses bitwise to the predictor-free one
+    (the fault-leaf pattern from ``repro.core.faults``).
+
+  * :func:`init_history` / :func:`update_history` — the pusher-side
+    history state and its transition.  ``update_history`` is a PURE
+    function of the accepted-push sequence (no store reads, no RNG, no
+    round numbers), so SPMD shard-local pushes, the async simulator's
+    owner pushes and a checkpoint-resumed run all agree exactly; the
+    property test in ``tests/test_predictor.py`` pins this.
+
+Storage/wire layout: the predicted-delta rows live in a SECOND store-
+shaped pytree (``pstore`` — ``{"data"[, "scale"]}`` with the exact slot
+geometry and precision of the halo store), so every existing exchange
+helper (``push`` / ``shard_push`` / ``owner_push`` / ``pull_slab`` /
+``collective_pull``) and the manifest+CRC checkpoint layout work on it
+verbatim — the same extra-leaves discipline as serving's ``store_bare``.
+Consumers apply the prediction as a fused epilogue in ``halo_spmm``'s
+dequant step:
+
+    predicted(row) = dequant(store row) + γ · dequant(pstore row)
+
+which costs one extra gather+FMA per edge, not a second aggregation
+pass.  Fault-masked shards skip both the store push and the history
+update, so degraded pulls extrapolate from the last-known-good delta.
+
+The "online" in SAT is a learned scaling, not a fixed extrapolation:
+raw per-sync deltas anti-correlate with the next interval's change
+whenever training oscillates (small graphs, Adam), and a fixed γ = 1
+step then *increases* staleness error.  ``update_history`` therefore
+fits, at every accepted push and per (part, layer), the scalar least-
+squares coefficient of the realized representation change against the
+previously pushed history rows, EMA-smooths it, and scales the emitted
+pstore rows by it.  The coefficient starts at 0 — prediction is
+exactly raw-stale until the history has demonstrably explained past
+motion — and decays back toward 0 whenever the fit stops holding, so
+the predictor can approach the raw-stale error from below instead of
+gambling on linearity (the bench-regression gate in
+``benchmarks/sat_prediction.py`` holds because of this).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+KINDS = ("none", "delta", "ema")
+
+# Clip range of the online-learned scaling coefficient: negative fits
+# damp oscillation (the realized change opposing the pushed rows) but
+# are bounded at -1; >1 fits extrapolate past linear but are bounded
+# well short of runaway feedback.
+COEF_MIN = -1.0
+COEF_MAX = 1.5
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    """Frozen predictor knob — hashable, safe to close over in jit.
+
+    kind:  "none" (no predictor leaves at all), "delta" (last-two-syncs
+           delta), or "ema" (β-EMA of per-sync deltas).
+    gamma: pull-time extrapolation coefficient — predicted = stale +
+           γ·history.  γ=1 with kind="delta" is linear extrapolation.
+    beta:  EMA weight of the newest delta (kind="ema" only).
+    """
+    kind: str = "none"
+    gamma: float = 1.0
+    beta: float = 0.5
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"predictor kind {self.kind!r} not in {KINDS}")
+        if not (0.0 < self.beta <= 1.0):
+            raise ValueError(f"predictor beta {self.beta} must be in (0, 1]")
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+
+def init_history(num_parts: int, num_hidden_layers: int, rows: int,
+                 hidden: int) -> dict:
+    """Device-local fp32 history state, shaped like the push buffers.
+
+    prev:  (M, L-1, S, hidden) — last representations each part pushed.
+    ema:   (M, L-1, S, hidden) — last emitted *base* rows: the delta
+           (kind="delta") or the running β-EMA of deltas (kind="ema"),
+           BEFORE the learned coefficient — both the EMA recursion and
+           the next push's least-squares fit read it.
+    coef:  (M, L-1) f32 — the online-learned scaling of the base rows
+           (starts at 0: no prediction until the history has explained
+           past motion).
+    count: (M,) int32 — completed pushes per part (gates the first
+           delta, which has no previous push to difference against).
+    """
+    shape = (num_parts, num_hidden_layers, rows, hidden)
+    return {"prev": jnp.zeros(shape, jnp.float32),
+            "ema": jnp.zeros(shape, jnp.float32),
+            "coef": jnp.zeros((num_parts, num_hidden_layers),
+                              jnp.float32),
+            "count": jnp.zeros((num_parts,), jnp.int32)}
+
+
+def update_history(hist: dict, reps, ok, cfg: PredictorConfig):
+    """One push event: advance the history and emit the pstore rows.
+
+    Args:
+      hist: the :func:`init_history` dict (leading part axis M).
+      reps: (M, L-1, S, hidden) fp32 — the representations being pushed
+        this event (same buffer the store push consumes).
+      ok:   (M,) bool — which parts' pushes take effect (push cadence ∧
+        fault mask ∧ watchdog, exactly the store-push gate).  Masked
+        parts keep their history frozen, so a later degraded pull
+        extrapolates from the last-known-good delta.
+      cfg:  static :class:`PredictorConfig` (kind != "none").
+
+    Returns ``(new_hist, push_rows)`` where push_rows (M, L-1, S,
+    hidden) fp32 is what belongs in the pstore for the gated parts (the
+    caller routes masked parts' rows to the shard sentinel via the same
+    ``local_valid & ok`` mask as the store push).  Pure: depends only on
+    (hist, reps, ok, cfg).
+
+    The emitted rows are ``coef · base``: per (part, layer) the scalar
+    least-squares fit of this push's realized change against the
+    previously pushed base rows, β-EMA-smoothed across pushes and
+    clipped to [COEF_MIN, COEF_MAX].  Until the previous base rows have
+    any energy (the first two pushes) the coefficient stays put, so
+    early predictions are exactly zero — bitwise raw-stale pulls.
+    """
+    gate = ok[:, None, None, None]
+    seen = (hist["count"] > 0)[:, None, None, None]
+    delta = jnp.where(seen, reps - hist["prev"], 0.0)
+    if cfg.kind == "ema":
+        base = cfg.beta * delta + (1.0 - cfg.beta) * hist["ema"]
+    elif cfg.kind == "delta":
+        base = delta
+    else:
+        raise ValueError(f"update_history with kind={cfg.kind!r}")
+    # Online fit: how much of the realized change ``delta`` did the rows
+    # we pushed LAST sync (hist["ema"], pre-coefficient) explain?
+    num = jnp.sum(delta * hist["ema"], axis=(2, 3))          # (M, L-1)
+    den = jnp.sum(jnp.square(hist["ema"]), axis=(2, 3))     # (M, L-1)
+    fit = jnp.clip(num / jnp.maximum(den, 1e-12), COEF_MIN, COEF_MAX)
+    have_fit = ok[:, None] & (den > 1e-12)
+    coef = jnp.where(have_fit,
+                     cfg.beta * fit + (1.0 - cfg.beta) * hist["coef"],
+                     hist["coef"])
+    rows = coef[:, :, None, None] * base
+    new_hist = {"prev": jnp.where(gate, reps, hist["prev"]),
+                "ema": jnp.where(gate, base, hist["ema"]),
+                "coef": coef,
+                "count": hist["count"] + ok.astype(jnp.int32)}
+    return new_hist, rows

@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.gat_edge.gat_edge import gat_edge_partial_pallas
 from repro.kernels.gat_edge.ref import gat_edge_partial_ref, merge_partials

@@ -52,6 +52,15 @@ Three grid/block designs share one inner loop:
 Per-row scales ride along as a (rows, 1) fp32 column and are folded into
 the edge weight (``w · scale[idx]``) before the FMA, so the inner loop
 stays a gather + single fused multiply-add in all three designs.
+
+**Staleness-alleviated prediction epilogue** (``pdata`` / ``pscale`` /
+``gamma``): when the SAT predictor is on (see ``repro.core.predictor``),
+the history slab rides beside the data slab through the SAME BlockSpecs
+and the gathered row becomes ``dequant(data[s]) + γ·dequant(pdata[s])``
+inside the existing inner loop — one extra gather+FMA per edge in all
+three designs, never a second aggregation pass.  ``gamma`` is a static
+(jit-cache-keyed) float; with ``pdata=None`` the emitted kernels are
+exactly the predictor-free ones.
 """
 from __future__ import annotations
 
@@ -87,9 +96,38 @@ def _halo_kernel_scaled(nbr_ref, wts_ref, data_ref, scale_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _make_resident_pred_kernel(gamma: float):
+    """Resident kernel with the SAT epilogue: each gathered row is
+    ``dequant(data[s]) + gamma * dequant(pdata[s])`` — the prediction
+    rides the same gather loop, one extra gather+FMA per edge."""
+    def kernel(nbr_ref, wts_ref, data_ref, scale_ref, pdata_ref,
+               pscale_ref, out_ref):
+        deg = nbr_ref.shape[1]
+        table = data_ref[...]
+        scale = scale_ref[...][:, 0]
+        ptable = pdata_ref[...]
+        pscale = pscale_ref[...][:, 0]
+
+        def body(k, acc):
+            idx = nbr_ref[:, k]
+            w = wts_ref[:, k].astype(jnp.float32)
+            gathered = jnp.take(table, idx, axis=0).astype(jnp.float32)
+            pgathered = jnp.take(ptable, idx, axis=0).astype(jnp.float32)
+            ws = w * jnp.take(scale, idx, axis=0)
+            wp = w * jnp.float32(gamma) * jnp.take(pscale, idx, axis=0)
+            return acc + ws[:, None] * gathered + wp[:, None] * pgathered
+
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
+        acc = jax.lax.fori_loop(0, deg, body, acc)
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
 def halo_spmm_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
-                     scale: jax.Array = None,
+                     scale: jax.Array = None, pdata: jax.Array = None,
+                     pscale: jax.Array = None, gamma: float = 1.0,
                      interpret: bool = True) -> jax.Array:
     """Fused pull+aggregate via pallas_call.
 
@@ -98,10 +136,13 @@ def halo_spmm_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
       wts:   (rows, deg) float — 0 at padding slots.
       data:  (n_slots_padded, feat) slab incl. sentinel row (fp32/bf16/int8).
       scale: optional (n_slots_padded, 1) fp32 per-row dequant scales.
+      pdata/pscale: optional predictor-history slab in the same layout;
+        gathered rows become dequant(data) + gamma·dequant(pdata).
+      gamma: static extrapolation coefficient (jit-cache-keyed).
     Returns:
       (rows, feat) float32 result.
     """
-    if scale is None:
+    if scale is None and pdata is None:
         # Unscaled fp32/bf16 slabs are exactly the ELL SpMM (its inner
         # loop already upcasts gathered rows to f32); one kernel body to
         # keep in sync for future block/DMA changes.
@@ -114,31 +155,56 @@ def halo_spmm_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
         raise ValueError(f"rows={rows} feat={feat} must be divisible by "
                          f"block ({br},{bf}); pad upstream")
     grid = (rows // br, feat // bf)
+    specs = [
+        pl.BlockSpec((br, deg), lambda i, j: (i, 0)),
+        pl.BlockSpec((br, deg), lambda i, j: (i, 0)),
+        pl.BlockSpec((n_tab, bf), lambda i, j: (0, j)),
+        pl.BlockSpec((n_tab, 1), lambda i, j: (0, 0)),
+    ]
+    if scale is None:
+        scale = jnp.ones((n_tab, 1), jnp.float32)
+    if pdata is None:
+        return pl.pallas_call(
+            _halo_kernel_scaled,
+            grid=grid,
+            in_specs=specs,
+            out_specs=pl.BlockSpec((br, bf), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+            interpret=interpret,
+        )(nbr, wts, data, scale)
+    if pscale is None:
+        pscale = jnp.ones((n_tab, 1), jnp.float32)
+    specs += [
+        pl.BlockSpec((n_tab, bf), lambda i, j: (0, j)),
+        pl.BlockSpec((n_tab, 1), lambda i, j: (0, 0)),
+    ]
     return pl.pallas_call(
-        _halo_kernel_scaled,
+        _make_resident_pred_kernel(gamma),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, deg), lambda i, j: (i, 0)),
-            pl.BlockSpec((br, deg), lambda i, j: (i, 0)),
-            pl.BlockSpec((n_tab, bf), lambda i, j: (0, j)),
-            pl.BlockSpec((n_tab, 1), lambda i, j: (0, 0)),
-        ],
+        in_specs=specs,
         out_specs=pl.BlockSpec((br, bf), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
         interpret=interpret,
-    )(nbr, wts, data, scale)
+    )(nbr, wts, data, scale, pdata, pscale)
 
 
 def _chunk_contrib(base, chunk_rows: int, nbr_ref, wts_ref, data_ref,
-                   scale_ref, out_shape):
+                   scale_ref, out_shape, pdata_ref=None, pscale_ref=None,
+                   gamma: float = 1.0):
     """One chunk's masked gather/dequant/FMA partial sum — the single
     inner loop both streamed kernels (dense and chunk-skipping) run, so
     their bitwise-equality invariant has one source of truth.  Edges
     whose slot falls outside [base, base + chunk_rows) contribute exact
-    ±0.0."""
+    ±0.0.  With a predictor tile (``pdata_ref``/``pscale_ref``) the
+    gathered row is the SAT prediction dequant(data) + γ·dequant(pdata)
+    — one extra gather+FMA inside the same loop, again for both streamed
+    kernels at once."""
     deg = nbr_ref.shape[1]
     table = data_ref[...]                        # (chunk_rows, BF) tile
     scale = scale_ref[...][:, 0]                 # (chunk_rows,)
+    if pdata_ref is not None:
+        ptable = pdata_ref[...]
+        pscale = pscale_ref[...][:, 0]
 
     def body(k, acc):
         idx = nbr_ref[:, k] - base
@@ -148,14 +214,24 @@ def _chunk_contrib(base, chunk_rows: int, nbr_ref, wts_ref, data_ref,
         w = (wts_ref[:, k].astype(jnp.float32)
              * jnp.take(scale, idx, axis=0)
              * hit.astype(jnp.float32))
-        return acc + w[:, None] * gathered
+        acc = acc + w[:, None] * gathered
+        if pdata_ref is not None:
+            pgathered = jnp.take(ptable, idx, axis=0).astype(jnp.float32)
+            wp = (wts_ref[:, k].astype(jnp.float32) * jnp.float32(gamma)
+                  * jnp.take(pscale, idx, axis=0)
+                  * hit.astype(jnp.float32))
+            acc = acc + wp[:, None] * pgathered
+        return acc
 
     return jax.lax.fori_loop(0, deg, body,
                              jnp.zeros(out_shape, jnp.float32))
 
 
-def _make_stream_kernel(chunk_rows: int):
-    def kernel(base_ref, nbr_ref, wts_ref, data_ref, scale_ref, out_ref):
+def _make_stream_kernel(chunk_rows: int, pred: bool = False,
+                        gamma: float = 1.0):
+    def kernel(base_ref, nbr_ref, wts_ref, data_ref, scale_ref, *rest):
+        pdata_ref, pscale_ref = (rest[0], rest[1]) if pred else (None, None)
+        out_ref = rest[-1]
         c = pl.program_id(2)
 
         @pl.when(c == 0)
@@ -164,15 +240,18 @@ def _make_stream_kernel(chunk_rows: int):
 
         out_ref[...] += _chunk_contrib(base_ref[c], chunk_rows, nbr_ref,
                                        wts_ref, data_ref, scale_ref,
-                                       out_ref.shape)
+                                       out_ref.shape, pdata_ref,
+                                       pscale_ref, gamma)
 
     return kernel
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("chunk_rows", "interpret"))
+                   static_argnames=("chunk_rows", "gamma", "interpret"))
 def halo_spmm_stream_pallas(nbr: jax.Array, wts: jax.Array,
                             data: jax.Array, scale: jax.Array = None,
+                            pdata: jax.Array = None,
+                            pscale: jax.Array = None, gamma: float = 1.0,
                             chunk_rows: int = STREAM_CHUNK_ROWS,
                             interpret: bool = True) -> jax.Array:
     """Streaming fused pull+aggregate: the slab never resides in VMEM.
@@ -194,40 +273,59 @@ def halo_spmm_stream_pallas(nbr: jax.Array, wts: jax.Array,
                          f"block ({br},{bf}); pad upstream")
     if scale is None:
         scale = jnp.ones((n_tab, 1), jnp.float32)
+    pred = pdata is not None
+    if pred and pscale is None:
+        pscale = jnp.ones((n_tab, 1), jnp.float32)
     # Pad the slab (and scales) to a whole number of chunks; padding rows
     # are all-zero and no index ever reaches them.
     pad = (-n_tab) % chunk_rows
     if pad:
         data = jnp.pad(data, ((0, pad), (0, 0)))
         scale = jnp.pad(scale, ((0, pad), (0, 0)), constant_values=1.0)
+        if pred:
+            pdata = jnp.pad(pdata, ((0, pad), (0, 0)))
+            pscale = jnp.pad(pscale, ((0, pad), (0, 0)),
+                             constant_values=1.0)
     n_chunks = (n_tab + pad) // chunk_rows
     chunk_base = jnp.arange(n_chunks, dtype=jnp.int32) * chunk_rows
 
+    in_specs = [
+        pl.BlockSpec((br, deg), lambda i, j, c, b: (i, 0)),
+        pl.BlockSpec((br, deg), lambda i, j, c, b: (i, 0)),
+        pl.BlockSpec((chunk_rows, bf), lambda i, j, c, b: (c, j)),
+        pl.BlockSpec((chunk_rows, 1), lambda i, j, c, b: (c, 0)),
+    ]
+    operands = [chunk_base, nbr, wts, data, scale]
+    if pred:
+        # The history slab streams chunk-for-chunk beside the data slab.
+        in_specs += [
+            pl.BlockSpec((chunk_rows, bf), lambda i, j, c, b: (c, j)),
+            pl.BlockSpec((chunk_rows, 1), lambda i, j, c, b: (c, 0)),
+        ]
+        operands += [pdata, pscale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         # Chunk axis innermost: the output block index is chunk-invariant,
         # so the accumulator tile stays in VMEM while slab chunks stream
         # past it (the pipeline prefetches chunk c+1 during chunk c).
         grid=(rows // br, feat // bf, n_chunks),
-        in_specs=[
-            pl.BlockSpec((br, deg), lambda i, j, c, b: (i, 0)),
-            pl.BlockSpec((br, deg), lambda i, j, c, b: (i, 0)),
-            pl.BlockSpec((chunk_rows, bf), lambda i, j, c, b: (c, j)),
-            pl.BlockSpec((chunk_rows, 1), lambda i, j, c, b: (c, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bf), lambda i, j, c, b: (i, j)),
     )
     return pl.pallas_call(
-        _make_stream_kernel(chunk_rows),
+        _make_stream_kernel(chunk_rows, pred, gamma),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
         interpret=interpret,
-    )(chunk_base, nbr, wts, data, scale)
+    )(*operands)
 
 
-def _make_skip_kernel(chunk_rows: int, count_visits: bool):
+def _make_skip_kernel(chunk_rows: int, count_visits: bool,
+                      pred: bool = False, gamma: float = 1.0):
     def kernel(ids_ref, cnt_ref, nbr_ref, wts_ref, data_ref, scale_ref,
-               *out_refs):
+               *rest):
+        pdata_ref, pscale_ref = (rest[0], rest[1]) if pred else (None, None)
+        out_refs = rest[2:] if pred else rest
         out_ref = out_refs[0]
         i = pl.program_id(0)
         t = pl.program_id(2)
@@ -248,7 +346,8 @@ def _make_skip_kernel(chunk_rows: int, count_visits: bool):
         def _accumulate():
             out_ref[...] += _chunk_contrib(base, chunk_rows, nbr_ref,
                                            wts_ref, data_ref, scale_ref,
-                                           out_ref.shape)
+                                           out_ref.shape, pdata_ref,
+                                           pscale_ref, gamma)
 
         if count_visits:
             visit_ref = out_refs[1]
@@ -261,12 +360,14 @@ def _make_skip_kernel(chunk_rows: int, count_visits: bool):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_rows", "interpret",
-                                             "count_visits"))
+@functools.partial(jax.jit, static_argnames=("chunk_rows", "gamma",
+                                             "interpret", "count_visits"))
 def halo_spmm_skip_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
                           scale: jax.Array = None,
                           wl_ids: jax.Array = None,
                           wl_cnt: jax.Array = None,
+                          pdata: jax.Array = None,
+                          pscale: jax.Array = None, gamma: float = 1.0,
                           chunk_rows: int = STREAM_CHUNK_ROWS,
                           interpret: bool = True,
                           count_visits: bool = False):
@@ -325,10 +426,17 @@ def halo_spmm_skip_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
             f"worklist with this chunk_rows")
     if scale is None:
         scale = jnp.ones((n_tab, 1), jnp.float32)
+    pred = pdata is not None
+    if pred and pscale is None:
+        pscale = jnp.ones((n_tab, 1), jnp.float32)
     pad = (-n_tab) % chunk_rows
     if pad:
         data = jnp.pad(data, ((0, pad), (0, 0)))
         scale = jnp.pad(scale, ((0, pad), (0, 0)), constant_values=1.0)
+        if pred:
+            pdata = jnp.pad(pdata, ((0, pad), (0, 0)))
+            pscale = jnp.pad(pscale, ((0, pad), (0, 0)),
+                             constant_values=1.0)
 
     out_shape = [jax.ShapeDtypeStruct((rows, feat), jnp.float32)]
     out_specs = [pl.BlockSpec((br, bf), lambda i, j, t, ids, cnt: (i, j))]
@@ -338,6 +446,25 @@ def halo_spmm_skip_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
         out_specs.append(pl.BlockSpec((1, 1),
                                       lambda i, j, t, ids, cnt: (i, t)))
 
+    in_specs = [
+        pl.BlockSpec((br, deg), lambda i, j, t, ids, cnt: (i, 0)),
+        pl.BlockSpec((br, deg), lambda i, j, t, ids, cnt: (i, 0)),
+        pl.BlockSpec((chunk_rows, bf),
+                     lambda i, j, t, ids, cnt: (ids[i, t], j)),
+        pl.BlockSpec((chunk_rows, 1),
+                     lambda i, j, t, ids, cnt: (ids[i, t], 0)),
+    ]
+    operands = [wl_ids, wl_cnt, nbr, wts, data, scale]
+    if pred:
+        # History slab tiles resolve through the same worklist entry, so
+        # skipped chunks stay skipped with the predictor on.
+        in_specs += [
+            pl.BlockSpec((chunk_rows, bf),
+                         lambda i, j, t, ids, cnt: (ids[i, t], j)),
+            pl.BlockSpec((chunk_rows, 1),
+                         lambda i, j, t, ids, cnt: (ids[i, t], 0)),
+        ]
+        operands += [pdata, pscale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         # Worklist position innermost: the output block index is
@@ -345,20 +472,13 @@ def halo_spmm_skip_pallas(nbr: jax.Array, wts: jax.Array, data: jax.Array,
         # resolves t through the prefetched worklist, so the pipeline
         # prefetches chunk ids[i, t+1] during chunk ids[i, t].
         grid=(rows // br, feat // bf, max_chunks),
-        in_specs=[
-            pl.BlockSpec((br, deg), lambda i, j, t, ids, cnt: (i, 0)),
-            pl.BlockSpec((br, deg), lambda i, j, t, ids, cnt: (i, 0)),
-            pl.BlockSpec((chunk_rows, bf),
-                         lambda i, j, t, ids, cnt: (ids[i, t], j)),
-            pl.BlockSpec((chunk_rows, 1),
-                         lambda i, j, t, ids, cnt: (ids[i, t], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs if count_visits else out_specs[0],
     )
     out = pl.pallas_call(
-        _make_skip_kernel(chunk_rows, count_visits),
+        _make_skip_kernel(chunk_rows, count_visits, pred, gamma),
         grid_spec=grid_spec,
         out_shape=out_shape if count_visits else out_shape[0],
         interpret=interpret,
-    )(wl_ids, wl_cnt, nbr, wts, data, scale)
+    )(*operands)
     return out

@@ -105,10 +105,12 @@ def halo_gather(nbr: jax.Array, data: jax.Array,
 @functools.partial(jax.jit,
                    static_argnames=("backend", "resident_max_bytes",
                                     "chunk_rows", "occupancy",
-                                    "skip_occupancy_max"))
+                                    "skip_occupancy_max", "gamma"))
 def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
               scale: jax.Array = None, wl_ids: jax.Array = None,
-              wl_cnt: jax.Array = None, backend: str = "auto",
+              wl_cnt: jax.Array = None, pdata: jax.Array = None,
+              pscale: jax.Array = None, gamma: float = 1.0,
+              backend: str = "auto",
               resident_max_bytes: int = None, chunk_rows: int = None,
               occupancy: float = None,
               skip_occupancy_max: float = None) -> jax.Array:
@@ -117,6 +119,15 @@ def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
     out[i] = Σ_k wts[i,k] · dequant(data[nbr[i,k]]) with optional per-row
     int8 scales — the out-of-subgraph side of Eq. 5 read directly from
     storage precision (no materialized per-subgraph halo table).
+
+    With a predictor slab (``pdata``/``pscale``, the SAT history rows in
+    the data slab's exact layout; see ``repro.core.predictor``) every
+    gathered row becomes the staleness-alleviated prediction
+    ``dequant(data[s]) + gamma·dequant(pdata[s])`` — fused into the
+    dequant epilogue of whichever kernel the ladder selects, one extra
+    gather+FMA per edge rather than a second aggregation pass.  ``gamma``
+    is static (jit-cache-keyed); with ``pdata=None`` the emitted program
+    is exactly the predictor-free one.
 
     Optional occupancy-aware streaming (see module docstring for the
     selection ladder):
@@ -135,7 +146,7 @@ def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
     if backend == "auto":
         backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
     if backend == "jnp":
-        return halo_spmm_ref(nbr, wts, data, scale)
+        return halo_spmm_ref(nbr, wts, data, scale, pdata, pscale, gamma)
 
     interpret = backend not in ("pallas", "pallas_stream", "pallas_skip")
     force_stream = backend.startswith("pallas_stream")
@@ -153,6 +164,11 @@ def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
         stripe = data.shape[0] * (min(BLOCK_F, data.shape[1])
                                   * data.dtype.itemsize
                                   + (4 if scale is not None else 0))
+        if pdata is not None:
+            # The history slab rides the same tiles — double the stripe.
+            stripe += data.shape[0] * (min(BLOCK_F, pdata.shape[1])
+                                       * pdata.dtype.itemsize
+                                       + (4 if pscale is not None else 0))
         stream = stripe > resident_max_bytes
     skip = force_skip
     if stream and not force_stream and not force_skip and has_worklist:
@@ -167,16 +183,20 @@ def halo_spmm(nbr: jax.Array, wts: jax.Array, data: jax.Array,
     nbr_p = _pad_dim(nbr, 0, 128, value=data.shape[0] - 1)
     wts_p = _pad_dim(wts, 0, 128, value=0)
     dat_p = _pad_dim(data, 1, 128, value=0)
+    pdat_p = _pad_dim(pdata, 1, 128, value=0) if pdata is not None else None
     if skip:
         out = halo_spmm_skip_pallas(nbr_p, wts_p, dat_p, scale,
                                     wl_ids=wl_ids, wl_cnt=wl_cnt,
-                                    chunk_rows=chunk_rows,
+                                    pdata=pdat_p, pscale=pscale,
+                                    gamma=gamma, chunk_rows=chunk_rows,
                                     interpret=interpret)
     elif stream:
         out = halo_spmm_stream_pallas(nbr_p, wts_p, dat_p, scale,
-                                      chunk_rows=chunk_rows,
+                                      pdata=pdat_p, pscale=pscale,
+                                      gamma=gamma, chunk_rows=chunk_rows,
                                       interpret=interpret)
     else:
         out = halo_spmm_pallas(nbr_p, wts_p, dat_p, scale,
+                               pdata=pdat_p, pscale=pscale, gamma=gamma,
                                interpret=interpret)
     return out[:rows, :feat]

@@ -13,19 +13,36 @@ def spmm_ref(nbr: jax.Array, wts: jax.Array, table: jax.Array) -> jax.Array:
 
 
 def halo_spmm_ref(nbr: jax.Array, wts: jax.Array, data: jax.Array,
-                  scale: jax.Array = None) -> jax.Array:
+                  scale: jax.Array = None, pdata: jax.Array = None,
+                  pscale: jax.Array = None,
+                  gamma: float = 1.0) -> jax.Array:
     """Fused pull+aggregate oracle: SpMM against a (possibly quantized)
-    compact slab with per-row dequant scales folded into the weights."""
+    compact slab with per-row dequant scales folded into the weights.
+
+    With a predictor slab (``pdata``/``pscale`` — the SAT history rows,
+    same layout as ``data``/``scale``) each gathered row is the
+    staleness-alleviated prediction
+    ``dequant(data[s]) + gamma * dequant(pdata[s])``."""
     w = wts.astype(jnp.float32)
+    ws = w
     if scale is not None:
-        w = w * jnp.take(scale[:, 0], nbr, axis=0)
+        ws = w * jnp.take(scale[:, 0], nbr, axis=0)
     gathered = jnp.take(data, nbr, axis=0).astype(jnp.float32)
-    return jnp.sum(w[..., None] * gathered, axis=1)
+    out = jnp.sum(ws[..., None] * gathered, axis=1)
+    if pdata is not None:
+        wp = w * jnp.float32(gamma)
+        if pscale is not None:
+            wp = wp * jnp.take(pscale[:, 0], nbr, axis=0)
+        pgathered = jnp.take(pdata, nbr, axis=0).astype(jnp.float32)
+        out = out + jnp.sum(wp[..., None] * pgathered, axis=1)
+    return out
 
 
 def halo_spmm_skip_ref(nbr: jax.Array, wts: jax.Array, data: jax.Array,
                        scale: jax.Array, wl_ids, wl_cnt,
-                       chunk_rows: int, block_rows: int = 128) -> jax.Array:
+                       chunk_rows: int, block_rows: int = 128,
+                       pdata: jax.Array = None, pscale: jax.Array = None,
+                       gamma: float = 1.0) -> jax.Array:
     """Worklist-masked oracle for the chunk-skipping streamed kernel.
 
     Accumulates only the contributions whose slab row falls inside a
@@ -48,7 +65,15 @@ def halo_spmm_skip_ref(nbr: jax.Array, wts: jax.Array, data: jax.Array,
     block_of = jnp.minimum(jnp.arange(rows) // block_rows, n_blocks - 1)
     in_visited = visited[block_of[:, None], nbr // chunk_rows]
     w = wts.astype(jnp.float32) * in_visited.astype(jnp.float32)
+    ws = w
     if scale is not None:
-        w = w * jnp.take(scale[:, 0], nbr, axis=0)
+        ws = w * jnp.take(scale[:, 0], nbr, axis=0)
     gathered = jnp.take(data, nbr, axis=0).astype(jnp.float32)
-    return jnp.sum(w[..., None] * gathered, axis=1)
+    out = jnp.sum(ws[..., None] * gathered, axis=1)
+    if pdata is not None:
+        wp = w * jnp.float32(gamma)
+        if pscale is not None:
+            wp = wp * jnp.take(pscale[:, 0], nbr, axis=0)
+        pgathered = jnp.take(pdata, nbr, axis=0).astype(jnp.float32)
+        out = out + jnp.sum(wp[..., None] * pgathered, axis=1)
+    return out

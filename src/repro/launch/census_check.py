@@ -1,0 +1,78 @@
+"""Gate a dry-run collective-census JSONL on the zero-all-gather rule.
+
+The CI dryrun-smoke job compiles the 512-chip multi-pod collective
+epoch (repro.launch.dryrun_gnn) and must fail the build if the lowered
+HLO picked up a dense-fallback collective.  That assert used to live
+as an inline heredoc in .github/workflows/ci.yml — untestable and
+invisible to grep.  It is now this entrypoint:
+
+  PYTHONPATH=src python -m repro.launch.census_check census.jsonl \\
+      [--records 2]
+
+For every JSON line the census must show
+
+  * all-gather == 0 and reduce-scatter == 0 — the two ops the
+    owner-sharded two-stage exchange exists to avoid;
+  * all-to-all >= 1 — the intra-pod ragged pull is actually present;
+  * collective-permute >= 1 — so is the inter-pod hop.
+
+``--records`` (default 2: the fp32 and int8/ppd=2 compiles the smoke
+job runs) pins the line count so a silently-skipped compile cannot
+pass; ``--records 0`` accepts any non-empty file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_census(records: list[dict], expect_records: int = 2) -> list[str]:
+    """Return a list of violation strings (empty = census OK)."""
+    errors = []
+    if expect_records and len(records) != expect_records:
+        errors.append(f"expected {expect_records} census records, "
+                      f"found {len(records)}")
+    if not records:
+        errors.append("census file is empty")
+    for rec in records:
+        counts = rec.get("collective_counts")
+        label = (f"{rec.get('mesh')} {rec.get('precision')} "
+                 f"ppd={rec.get('parts_per_device')} "
+                 f"predictor={rec.get('predictor', 'none')}")
+        if counts is None:
+            errors.append(f"{label}: record has no collective_counts")
+            continue
+        for op in ("all-gather", "reduce-scatter"):
+            if counts.get(op, 0) != 0:
+                errors.append(f"{label}: {op} == {counts.get(op)} "
+                              f"(must be 0): {counts}")
+        for op in ("all-to-all", "collective-permute"):
+            if counts.get(op, 0) < 1:
+                errors.append(f"{label}: {op} == {counts.get(op, 0)} "
+                              f"(two-stage exchange missing): {counts}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("census", help="JSONL file from dryrun_gnn --out")
+    ap.add_argument("--records", type=int, default=2,
+                    help="exact record count expected (0 = any non-empty)")
+    args = ap.parse_args(argv)
+    with open(args.census) as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    errors = check_census(records, expect_records=args.records)
+    for rec in records:
+        status = "FAIL" if errors else "OK"
+        print(f"census {status}: {rec.get('mesh')} {rec.get('precision')} "
+              f"ppd={rec.get('parts_per_device')} "
+              f"predictor={rec.get('predictor', 'none')} "
+              f"{rec.get('collective_counts')}")
+    for e in errors:
+        print(f"census violation: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ALIASES, ARCH_IDS, get_arch
 from repro.distributed.sharding import axis_rules, shardings_for_specs

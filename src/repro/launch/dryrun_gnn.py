@@ -27,12 +27,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import HaloPrecision, TrainSettings, make_epoch_fn
+from repro.core import (HaloPrecision, PredictorConfig, TrainSettings,
+                        make_epoch_fn)
 from repro.launch.dryrun import collective_bytes, cost_properties
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
                                make_production_mesh)
 from repro.models.gnn import GNNConfig, gnn_specs
-from repro.nn import abstract_params, param_axes
+from repro.nn import abstract_params
 from repro.optim import adam
 
 
@@ -157,6 +158,16 @@ def main():
                          "below SKIP_OCCUPANCY_MAX, so a Pallas backend "
                          "lowers the chunk-skipping stream) and is "
                          "recorded in the JSON line")
+    ap.add_argument("--predictor", default="none",
+                    choices=("none", "delta", "ema"),
+                    help="SAT staleness predictor kind: history pstore "
+                         "rides the store sharding, prediction fuses "
+                         "into the pull/dequant epilogue (adds exactly "
+                         "one all_to_all per history tensor in the "
+                         "collective census; 'none' lowers the identical "
+                         "program as before)")
+    ap.add_argument("--predictor-gamma", type=float, default=1.0)
+    ap.add_argument("--predictor-beta", type=float, default=0.5)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.halo_occupancy is None and args.order is not None:
@@ -180,8 +191,11 @@ def main():
                     halo_occupancy=args.halo_occupancy)
     opt = adam(5e-3)
     precision = HaloPrecision(args.precision)
+    pcfg = PredictorConfig(kind=args.predictor, gamma=args.predictor_gamma,
+                           beta=args.predictor_beta)
     settings = TrainSettings(sync_interval=10, mode="digest",
-                             pull_mode=args.pull, precision=precision)
+                             pull_mode=args.pull, precision=precision,
+                             predictor=pcfg)
     # (No M-vs-mesh geometry check needed here: num_parts is derived
     # from the mesh exchange axes above, so it divides by construction —
     # unlike train_gnn/examples, where --parts is user-supplied.)
@@ -230,6 +244,26 @@ def main():
         "store": store_sh, "cache": cache_sh,
         "epoch": rep, "step": rep,
     }
+    if pcfg.enabled:
+        # SAT history rides the exact store / slab geometry: the pstore
+        # is a second owner-sharded table, the raw-rep history is a
+        # device-local per-subgraph slab, the pulled pcache mirrors the
+        # halo cache (gcn dry-run model — not gat-projected).
+        state_abs["pstore"] = dict(store_abs)
+        state_sh["pstore"] = dict(store_sh)
+        slab = jax.ShapeDtypeStruct((num_parts, l1, S, args.hidden),
+                                    jnp.float32)
+        slab_sh = NamedSharding(mesh, P(mdim, None, None, None))
+        state_abs["predictor"] = {
+            "prev": slab, "ema": slab,
+            "coef": jax.ShapeDtypeStruct((num_parts, l1), jnp.float32),
+            "count": jax.ShapeDtypeStruct((num_parts,), jnp.int32)}
+        state_sh["predictor"] = {
+            "prev": slab_sh, "ema": slab_sh,
+            "coef": NamedSharding(mesh, P(mdim, None)),
+            "count": m_shard}
+        state_abs["pcache"] = dict(cache_abs)
+        state_sh["pcache"] = dict(cache_sh)
     data_sh = {}
     for k, v in data.items():
         if k == "x_global":
@@ -282,6 +316,7 @@ def main():
         "stream_chunk_rows": args.stream_chunk_rows,
         "halo_occupancy": args.halo_occupancy,
         "order": args.order,
+        "predictor": args.predictor,
         "hlo_flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll["total"],

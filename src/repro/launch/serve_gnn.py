@@ -27,7 +27,6 @@ import numpy as np
 
 from repro.core import serving
 from repro.core.digest import prepare_graph_data, top_layer_reps
-from repro.core.halo_exchange import HaloPrecision
 from repro.graph import make_dataset
 from repro.launch.mesh import make_host_mesh
 from repro.launch.serving_driver import run_serve_loop

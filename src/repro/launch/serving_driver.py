@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Iterable
 
 import jax
 import numpy as np

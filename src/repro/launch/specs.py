@@ -14,14 +14,13 @@ tokens *are* the EnCodec frame codes (vocab 2048).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import ArchConfig, arch_specs, cache_specs
 from repro.nn.params import ParamSpec, is_spec
-from repro.optim import Optimizer
 
 Pytree = Any
 

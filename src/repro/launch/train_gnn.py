@@ -68,6 +68,19 @@ def subgraph_shardings(data: dict, state: dict, mesh) -> tuple[dict, dict]:
     }
     if "push_residual" in state:
         state_sh["push_residual"] = slab_shard
+    if "pstore" in state:
+        # SAT predictor leaves (repro.core.predictor): the pstore is
+        # owner-sharded exactly like the store, the pulled pcache slab
+        # device-local like the cache, and the push-side history rides
+        # the push buffers' (M, ...) layout (count is per-part).
+        state_sh["pstore"] = jax.tree.map(lambda _: slot_shard,
+                                          state["pstore"])
+        state_sh["predictor"] = {"prev": slab_shard, "ema": slab_shard,
+                                 "coef": NamedSharding(mesh, P(mdim, None)),
+                                 "count": m_shard}
+        if "pcache" in state:
+            state_sh["pcache"] = jax.tree.map(lambda _: slab_shard,
+                                              state["pcache"])
     if "hist" in state:
         # Control-variate history (M, L-1, S, hidden): each device keeps
         # its own subgraphs' last-step representations — never exchanged.
@@ -206,6 +219,20 @@ def main():
                     help="'cv' = VR-GCN control variates over the stale "
                          "store; 'plain' = scaled-sample-only neighbor "
                          "sampling (the variance-ablation control)")
+    ap.add_argument("--predictor", default="none",
+                    choices=("none", "delta", "ema"),
+                    help="SAT staleness-alleviated prediction "
+                         "(repro.core.predictor): serve dequant(store) "
+                         "+ gamma*dequant(pstore) where the pstore "
+                         "carries each row's last-sync delta ('delta') "
+                         "or its beta-EMA ('ema'); 'none' compiles the "
+                         "bitwise-identical predictor-free program")
+    ap.add_argument("--predictor-gamma", type=float, default=1.0,
+                    help="pull-time extrapolation coefficient gamma "
+                         "(1.0 with 'delta' = linear extrapolation)")
+    ap.add_argument("--predictor-beta", type=float, default=0.5,
+                    help="EMA weight of the newest delta "
+                         "(--predictor ema only)")
     ap.add_argument("--no-gat-dedup", action="store_true",
                     help="disable the GAT owner-shard projection dedup "
                          "(legacy per-subgraph halo projection)")
@@ -262,12 +289,20 @@ def main():
                     halo_occupancy=data["_worklist"].occupancy,
                     gat_halo_dedup=not args.no_gat_dedup)
     opt = adam(5e-3)
+    from repro.core import PredictorConfig
+    predictor = PredictorConfig(kind=args.predictor,
+                                gamma=args.predictor_gamma,
+                                beta=args.predictor_beta)
     settings = TrainSettings(
         sync_interval=args.interval, mode="digest", pull_mode=args.pull,
         precision=HaloPrecision(args.precision,
                                 error_feedback=args.error_feedback),
         sample_estimator=args.estimator,
-        max_staleness=args.max_staleness)
+        max_staleness=args.max_staleness,
+        predictor=predictor)
+    if predictor.enabled:
+        print(f"predictor: kind={predictor.kind} gamma={predictor.gamma} "
+              f"beta={predictor.beta}")
     from repro.core import faults as faults_mod
     schedule = faults_mod.check_schedule(faults_mod.FaultConfig(
         seed=args.fault_seed, crash_rate=args.fault_crash_rate,
@@ -302,7 +337,8 @@ def main():
               f"{sampler.max_in_degree}), batch_seeds={args.batch_seeds}, "
               f"estimator={args.estimator}")
         state = init_sampled_state(cfg, opt, data,
-                                   precision=settings.precision)
+                                   precision=settings.precision,
+                                   predictor=settings.predictor)
         if fault_aware:
             state = faults_mod.attach_fault_state(state, args.parts)
         start = _maybe_resume(args, state)
@@ -323,7 +359,8 @@ def main():
             _maybe_ckpt(args, t + 1, state)
         ev = evaluate(cfg, state["params"], tdata)
     else:
-        state = init_state(cfg, opt, data, precision=settings.precision)
+        state = init_state(cfg, opt, data, precision=settings.precision,
+                           predictor=settings.predictor)
         if fault_aware:
             state = faults_mod.attach_fault_state(state, args.parts)
         start = _maybe_resume(args, state)

@@ -12,15 +12,11 @@ Backend policy:
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import logical_constraint
 from repro.kernels.flash_attention import multi_head_attention
-from repro.nn import apply_rope
 
 NEG_INF = -1e30
 

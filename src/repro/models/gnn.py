@@ -43,22 +43,47 @@ from repro.nn import ParamSpec, dense
 Pytree = Any
 
 
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class _StaticScalar:
+    """A number carried through a pytree as aux data, not a leaf: it
+    survives ``stop_gradient``/``vmap`` untouched and stays a plain
+    Python float for the static-argument kernel knobs (``gamma`` keys
+    the jit cache through ``halo_spmm``)."""
+    value: float
+
+
 def halo_ref(data: jax.Array, scale: Optional[jax.Array],
              nbr: jax.Array, wts: jax.Array,
              wl_ids: Optional[jax.Array] = None,
-             wl_cnt: Optional[jax.Array] = None) -> dict:
+             wl_cnt: Optional[jax.Array] = None,
+             pdata: Optional[jax.Array] = None,
+             pscale: Optional[jax.Array] = None,
+             gamma: float = 1.0) -> dict:
     """Bundle a shared halo slab (with sentinel zero row last) + indices.
 
     ``wl_ids``/``wl_cnt`` optionally carry the (row_block × chunk)
     occupancy worklist of this adjacency against the slab (see
     :class:`repro.graph.partition.ChunkWorklist`), enabling the chunk-
-    skipping streamed kernel on the Pallas backends."""
+    skipping streamed kernel on the Pallas backends.
+
+    ``pdata``/``pscale``/``gamma`` optionally carry the SAT predictor-
+    history slab (``repro.core.predictor``) in the data slab's exact
+    layout: the aggregation then reads the staleness-alleviated
+    prediction ``dequant(data) + gamma·dequant(pdata)`` per row, fused
+    into the kernel's dequant epilogue.  ``gamma`` is a static Python
+    float (it keys the jit cache through ``halo_spmm``)."""
     ref = {"data": data, "nbr": nbr, "wts": wts}
     if scale is not None:
         ref["scale"] = scale
     if wl_ids is not None and wl_cnt is not None:
         ref["wl_ids"] = wl_ids
         ref["wl_cnt"] = wl_cnt
+    if pdata is not None:
+        ref["pdata"] = pdata
+        ref["gamma"] = _StaticScalar(float(gamma))
+        if pscale is not None:
+            ref["pscale"] = pscale
     return ref
 
 
@@ -171,8 +196,11 @@ def _halo_agg(cfg, ref: dict, wts: jax.Array) -> jax.Array:
     """Out-of-subgraph fused pull+aggregate with the config's streaming
     knobs (chunk size, VMEM budget, occupancy-driven chunk skipping)
     threaded into the kernel selection in repro.kernels.spmm.ops."""
+    g = ref.get("gamma")
     return halo_spmm(ref["nbr"], wts, ref["data"], ref.get("scale"),
                      wl_ids=ref.get("wl_ids"), wl_cnt=ref.get("wl_cnt"),
+                     pdata=ref.get("pdata"), pscale=ref.get("pscale"),
+                     gamma=g.value if g is not None else 1.0,
                      backend=cfg.backend,
                      resident_max_bytes=cfg.resident_max_bytes,
                      chunk_rows=cfg.stream_chunk_rows,
@@ -238,6 +266,12 @@ def _gat_layer(cfg, p, x_local, x_halo, struct) -> jax.Array:
         x_out = ref["data"].astype(jnp.float32)
         if "scale" in ref:
             x_out = x_out * ref["scale"]
+        if "pdata" in ref:
+            # SAT prediction before projection — exact by linearity of W.
+            p_out = ref["pdata"].astype(jnp.float32)
+            if "pscale" in ref:
+                p_out = p_out * ref["pscale"]
+            x_out = x_out + jnp.float32(ref["gamma"].value) * p_out
         T = x_out.shape[0]                        # slab rows incl. sentinel
         z_out = jnp.einsum("sd,dhk->shk", x_out, p["w"])  # (T, heads, dh)
 

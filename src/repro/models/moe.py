@@ -17,7 +17,6 @@ Router load-balance aux loss follows the Switch/GShard formulation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -20,7 +20,6 @@ approximated — mirroring DIGEST's fresh-in/stale-out split.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -34,8 +34,7 @@ from repro.models.attention import (cross_attention, decode_attention,
 from repro.models.moe import load_balance_loss, moe_ffn
 from repro.models.recurrent import (mlstm_parallel, mlstm_step, rg_lru,
                                     rg_lru_step, slstm_scan)
-from repro.models.stale_kv import (StaleKVConfig, init_stale_kv_cache,
-                                   stale_kv_decode)
+from repro.models.stale_kv import StaleKVConfig, stale_kv_decode
 from repro.nn import ParamSpec, apply_rope, dense, rms_norm, swiglu
 
 Pytree = Any

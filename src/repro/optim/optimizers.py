@@ -11,7 +11,7 @@ footprint; factored second moments cost O(rows+cols).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -19,16 +19,14 @@ collectives, lowers to one all-reduce over "pod" every N steps.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import (ArchConfig, arch_specs, aux_moe_loss,
                                       decode_step, forward)
-from repro.nn import (abstract_params, init_params, param_axes,
-                      softmax_cross_entropy)
+from repro.nn import init_params, softmax_cross_entropy
 from repro.optim import (Optimizer, clip_by_global_norm, make_optimizer,
                          warmup_cosine_schedule)
 

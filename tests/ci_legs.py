@@ -1,0 +1,66 @@
+"""Single source of truth for the tier-1 CI leg partition.
+
+The CI matrix legs (see .github/workflows/ci.yml) PARTITION the test
+files: the ``single-device`` leg runs the whole suite on one device
+(multi-device coverage via the subprocess fallbacks baked into the
+files), while the 8-forced-device legs split the files among
+themselves so no file runs twice across them.  Membership used to live
+as an ``--ignore`` list in the workflow — silently wrong the moment a
+new leg-owned file landed.  It now lives HERE, is stamped onto every
+collected test as a derived ``leg_<name>`` marker by conftest.py, and
+is selected in the workflow with ``pytest -m leg_<name>``.
+
+Invariants (enforced by scripts/check_test_partition.py, which fails
+the build):
+
+  * the explicit sets below are pairwise disjoint;
+  * every named file exists under tests/;
+  * every ``tests/test_*.py`` file maps to exactly one leg — files not
+    claimed below default to ``collective-8dev``;
+  * a file's ``pytestmark = pytest.mark.leg("...")`` declaration (when
+    present) agrees with this registry.
+
+This module is imported by conftest.py during collection — keep it
+dependency-free (no jax, no pytest).
+"""
+
+# Files not claimed by any leg below run on this leg.
+DEFAULT_LEG = "collective-8dev"
+
+# leg name -> test-file stems it owns (and the matrix runs with 8
+# forced host devices).  Keep in sync with the ci.yml matrix.
+LEGS = {
+    "m16-ppd2-hlo": frozenset({
+        "test_hlo_collectives",
+        "test_collective_ppd",
+        "test_halo_properties",
+        "test_skip_stream",
+        "test_order_invariance",
+    }),
+    "multipod-2x4": frozenset({"test_multipod"}),
+    "serving-smoke": frozenset({"test_serving"}),
+    "sampling-smoke": frozenset({"test_sampling", "test_async_engine"}),
+    "fault-smoke": frozenset({"test_faults"}),
+    "sat-smoke": frozenset({"test_predictor"}),
+}
+
+ALL_LEGS = (DEFAULT_LEG,) + tuple(sorted(LEGS))
+
+
+def marker_name(leg: str) -> str:
+    """``-m``-selectable marker derived from a leg name."""
+    return "leg_" + leg.replace("-", "_")
+
+
+def leg_for(stem: str) -> str:
+    """The unique leg owning a test-file stem (default when unclaimed).
+
+    Raises if the registry claims the stem twice — the partition
+    violation also fails scripts/check_test_partition.py, but raising
+    here surfaces it in every local pytest run too.
+    """
+    owners = [leg for leg, files in LEGS.items() if stem in files]
+    if len(owners) > 1:
+        raise ValueError(
+            f"{stem} is claimed by multiple CI legs: {sorted(owners)}")
+    return owners[0] if owners else DEFAULT_LEG

@@ -81,3 +81,46 @@ except ImportError:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# CI leg partition markers.
+#
+# tests/ci_legs.py is the single source of truth for which 8-device CI
+# leg owns each test file; the hooks below register the markers, stamp
+# every collected test with its leg's derived ``leg_<name>`` marker
+# (so the workflow selects with ``pytest -m leg_<name>`` instead of an
+# --ignore list), and skip ``forced_devices(n)`` tests when the forced
+# host platform is smaller than n.
+# ---------------------------------------------------------------------------
+from ci_legs import ALL_LEGS, leg_for, marker_name  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "leg(name): CI leg that owns this test file (see tests/ci_legs.py; "
+        "checked against the registry by scripts/check_test_partition.py)")
+    config.addinivalue_line(
+        "markers",
+        "forced_devices(n): requires >= n forced host devices "
+        "(REPRO_HOST_DEVICES); skipped on smaller platforms")
+    for leg in ALL_LEGS:
+        config.addinivalue_line(
+            "markers",
+            f"{marker_name(leg)}: derived — tests owned by the "
+            f"'{leg}' CI leg (stamped from tests/ci_legs.py)")
+
+
+def pytest_collection_modifyitems(config, items):
+    num_devices = int(os.environ.get("REPRO_HOST_DEVICES", "1"))
+    for item in items:
+        stem = os.path.splitext(os.path.basename(str(item.fspath)))[0]
+        declared = item.get_closest_marker("leg")
+        leg = declared.args[0] if declared else leg_for(stem)
+        item.add_marker(getattr(pytest.mark, marker_name(leg)))
+        forced = item.get_closest_marker("forced_devices")
+        if forced and num_devices < int(forced.args[0]):
+            item.add_marker(pytest.mark.skip(
+                reason=f"needs {forced.args[0]} forced host devices "
+                       f"(REPRO_HOST_DEVICES={num_devices})"))

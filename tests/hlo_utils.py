@@ -123,17 +123,24 @@ def expected_collective_permute(storage: str, pods: int,
 
 
 def expected_all_to_all(storage: str, model: str = "gcn",
-                        num_layers: int = None) -> int:
+                        num_layers: int = None,
+                        predictor: bool = False) -> int:
     """all-to-all count of one collective PULL.
 
     gcn/sage pull the raw store: one op per store tensor ({data} or
     {data, scale}), the (L-1)-layer axis batched inside the exchange
     buffer — independent of depth.  gat (projected-row pull) exchanges
     one z tensor per hidden layer (widths differ per layer, so layers
-    cannot batch into one buffer): (L-1) ops, ×2 with int8 scales."""
+    cannot batch into one buffer): (L-1) ops, ×2 with int8 scales.
+
+    With the SAT ``predictor`` the pstore mirrors the store's tensors
+    and rides the same routing — one extra op per pstore tensor on the
+    raw-store pull; ZERO extra under the GAT dedup, whose prediction is
+    folded shard-locally before projection (the pulled z tensors are
+    unchanged)."""
     per_tensor = 2 if storage == "int8" else 1
     if model != "gat":
-        return per_tensor
+        return per_tensor * (2 if predictor else 1)
     if num_layers is None:
         num_layers = 2                    # make_epoch's gat default
     return per_tensor * (num_layers - 1)
@@ -143,7 +150,7 @@ def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",
                pull_mode: str = "collective", model: str = "gcn",
                hidden: int = 32, sync_interval: int = 2,
                error_feedback: bool = False, fault_state: bool = False,
-               max_staleness: int = None):
+               max_staleness: int = None, predictor=None):
     """Build (jitted_epoch_fn, state, tdata) for graph ``g``.
 
     With ``mesh`` the epoch is jitted with the production shardings
@@ -152,7 +159,8 @@ def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",
     the fault-injection leaves (``push_ok`` / ``last_push_round``) so
     the fault-aware program's census can be compared to the plain one.
     """
-    from repro.core import (TrainSettings, attach_fault_state, init_state,
+    from repro.core import (PredictorConfig, TrainSettings,
+                            attach_fault_state, init_state,
                             make_epoch_fn, prepare_graph_data)
     from repro.core.halo_exchange import HaloPrecision
     from repro.launch.train_gnn import subgraph_shardings
@@ -165,11 +173,13 @@ def make_epoch(g, num_parts: int, mesh=None, *, storage: str = "fp32",
                     in_dim=g.features.shape[1], hidden_dim=hidden,
                     num_classes=int(g.labels.max()) + 1, heads=2)
     opt = adam(5e-3)
+    pcfg = predictor or PredictorConfig()
     settings = TrainSettings(
         sync_interval=sync_interval, mode="digest", pull_mode=pull_mode,
         precision=HaloPrecision(storage, error_feedback=error_feedback),
-        max_staleness=max_staleness)
-    state = init_state(cfg, opt, data, precision=settings.precision)
+        max_staleness=max_staleness, predictor=pcfg)
+    state = init_state(cfg, opt, data, precision=settings.precision,
+                       predictor=pcfg)
     if fault_state:
         state = attach_fault_state(state, num_parts)
     if mesh is None:

@@ -30,6 +30,8 @@ from repro.graph import make_dataset
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
 
+pytestmark = pytest.mark.leg("sampling-smoke")
+
 
 @functools.lru_cache(maxsize=None)
 def _graph(seed: int = 0):

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.leg("m16-ppd2-hlo")
+
 
 def _tree_equal(a: dict, b: dict, what: str = ""):
     assert sorted(a) == sorted(b)

@@ -1,6 +1,5 @@
 """Unit tests for the dry-run HLO analysis tooling (pure parsing — no
 512-device mesh required)."""
-import numpy as np
 
 from repro.launch.dryrun import (_groups_cross_pod, collective_bytes)
 
@@ -79,3 +78,50 @@ def test_pod_split_totals():
     # the 512-wide all-to-all ([2,256]<=[512] → contiguous 256-blocks: each
     # group is exactly one pod) must NOT count as inter-pod
     assert out["inter_pod"] == 0
+
+
+def _census_rec(**over):
+    rec = {"mesh": "2x16x16", "precision": "fp32", "parts_per_device": 1,
+           "collective_counts": {"all-gather": 0, "all-reduce": 12,
+                                 "reduce-scatter": 0, "all-to-all": 1,
+                                 "collective-permute": 1}}
+    rec["collective_counts"].update(
+        over.pop("counts", {}))
+    rec.update(over)
+    return rec
+
+
+def test_census_check_accepts_clean_census(tmp_path):
+    from repro.launch.census_check import check_census, main
+    recs = [_census_rec(), _census_rec(precision="int8",
+                                       parts_per_device=2,
+                                       counts={"all-to-all": 2})]
+    assert check_census(recs) == []
+    path = tmp_path / "census.jsonl"
+    path.write_text("".join(__import__("json").dumps(r) + "\n"
+                            for r in recs))
+    assert main([str(path)]) == 0
+
+
+def test_census_check_rejects_all_gather(tmp_path):
+    from repro.launch.census_check import check_census, main
+    recs = [_census_rec(), _census_rec(counts={"all-gather": 3})]
+    errs = check_census(recs)
+    assert len(errs) == 1 and "all-gather" in errs[0]
+    path = tmp_path / "census.jsonl"
+    path.write_text("".join(__import__("json").dumps(r) + "\n"
+                            for r in recs))
+    assert main([str(path)]) == 1
+
+
+def test_census_check_rejects_missing_exchange_and_bad_count():
+    from repro.launch.census_check import check_census
+    # a silently-skipped compile (1 record instead of 2) fails ...
+    assert check_census([_census_rec()]) != []
+    # ... so does a record whose two-stage exchange vanished
+    errs = check_census([_census_rec(counts={"all-to-all": 0}),
+                         _census_rec(counts={"collective-permute": 0})])
+    assert any("all-to-all" in e for e in errs)
+    assert any("collective-permute" in e for e in errs)
+    # an empty census never passes, even with --records 0
+    assert check_census([], expect_records=0) != []

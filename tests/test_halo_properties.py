@@ -21,6 +21,9 @@ import hypothesis.strategies as st
 
 from repro.core import halo_exchange as hx
 from repro.core.halo_exchange import HaloPrecision
+import pytest
+
+pytestmark = pytest.mark.leg("m16-ppd2-hlo")
 
 L1 = 2
 

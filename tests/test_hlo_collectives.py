@@ -25,6 +25,8 @@ import sys
 import jax
 import pytest
 
+pytestmark = pytest.mark.leg("m16-ppd2-hlo")
+
 
 def _hlo_checks():
     import hlo_utils

@@ -3,7 +3,6 @@ short DIGEST LM training run with checkpoint/resume equivalence."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint

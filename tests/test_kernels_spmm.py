@@ -7,8 +7,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import halo_exchange as hx
-from repro.kernels.spmm import halo_spmm, halo_spmm_ref, \
-    halo_spmm_stream_pallas, spmm, spmm_pallas, spmm_ref
+from repro.kernels.spmm import (halo_spmm, halo_spmm_ref,
+                                halo_spmm_stream_pallas, spmm, spmm_ref)
 
 
 def _case(rng, rows, deg, ncols, feat, dtype):

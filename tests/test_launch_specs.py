@@ -1,6 +1,5 @@
 """Dry-run spec plumbing (shapes only, no 512-device mesh needed)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, get_arch

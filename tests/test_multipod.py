@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.leg("multipod-2x4")
+
 
 def _tree_equal(a: dict, b: dict, what: str = ""):
     assert sorted(a) == sorted(b)

@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optim import (adafactor, adamw, clip_by_global_norm,
-                         constant_schedule, sgd, warmup_cosine_schedule)
+from repro.optim import (adafactor, adamw, clip_by_global_norm, sgd,
+                         warmup_cosine_schedule)
 
 
 @pytest.mark.parametrize("make_opt", [

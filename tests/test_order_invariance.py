@@ -36,6 +36,8 @@ from repro.graph import (build_partitions, community_powerlaw_graph,
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
 
+pytestmark = pytest.mark.leg("m16-ppd2-hlo")
+
 
 # ---------------------------------------------------------------------------
 # Dense reference for the streaming partitioner (the retired formulation)

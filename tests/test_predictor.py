@@ -1,0 +1,306 @@
+"""SAT staleness-alleviated prediction: history purity, the "none"
+contract, crash-safe resume, and the collective census arithmetic.
+
+Pins the predictor PR's guarantees:
+
+  * **History purity** — ``update_history`` is a pure function of the
+    accepted-push sequence: replaying the same (reps, ok) sequence is
+    bitwise reproducible, masked parts freeze every history leaf, and
+    the online-learned coefficient starts at exactly 0 (the first
+    pushes emit all-zero pstore rows — raw-stale pulls until the
+    history has explained past motion).
+  * **Coefficient learning** — on a linear trajectory (constant
+    per-sync delta) the least-squares fit is exactly 1, the β-EMA
+    coefficient climbs toward it, and applying the emitted rows
+    strictly reduces the next sync's staleness error.
+  * **The "none" contract** — ``kind="none"`` creates NO predictor
+    leaves and its γ/β knobs are inert: runs with different disabled
+    configs are bitwise identical on both engines (SPMD epoch loop and
+    the DIGEST-A simulator).  An *enabled* predictor with γ = 0 keeps
+    params and store bitwise equal to the predictor-free run while the
+    history leaves exist and advance — the prediction epilogue is
+    exactly additive.
+  * **Exact resume** — kill-and-resume restores the pstore + history
+    leaves from the checksummed checkpoint bitwise.
+  * **Census arithmetic** — on the compiled 8-device collective epoch
+    the pstore rides the existing exchange: all_to_all grows by exactly
+    one op per pstore tensor (×2 under int8), all-gather / permute /
+    reduce-scatter stay ZERO, and the GAT dedup program is unchanged
+    (prediction folded shard-locally before projection).
+"""
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncSettings, PredictorConfig, TrainSettings,
+                        digest_a_train, digest_train, predictor,
+                        prepare_graph_data)
+from repro.graph import make_dataset
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+pytestmark = pytest.mark.leg("sat-smoke")
+
+
+@functools.lru_cache(maxsize=None)
+def _graph(seed: int = 0):
+    return make_dataset("flickr-sim", scale=0.12, seed=seed)
+
+
+def _cfg(g, model="gcn", num_layers=2, hidden=32):
+    return GNNConfig(model=model, num_layers=num_layers,
+                     in_dim=g.features.shape[1], hidden_dim=hidden,
+                     num_classes=int(g.labels.max()) + 1, heads=2)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        jnp.array_equal(x, y) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# History transition: purity, masking, zero-start
+# ---------------------------------------------------------------------------
+
+def _reps_seq(key, n, shape):
+    return [jax.random.normal(k, shape) for k in jax.random.split(key, n)]
+
+
+def test_history_update_is_pure_and_masked():
+    M, L1, S, H = 3, 2, 5, 4
+    cfg = PredictorConfig(kind="ema", beta=0.5)
+    seq = _reps_seq(jax.random.PRNGKey(0), 6, (M, L1, S, H))
+    oks = [jnp.array([True, True, False]), jnp.array([True, False, True]),
+           jnp.array([True, True, True])] * 2
+
+    def replay():
+        hist = predictor.init_history(M, L1, S, H)
+        rows = []
+        for reps, ok in zip(seq, oks):
+            hist, r = predictor.update_history(hist, reps, ok, cfg)
+            rows.append(r)
+        return hist, rows
+
+    h1, r1 = replay()
+    h2, r2 = replay()
+    # Pure: same accepted-push sequence → bitwise-identical history and
+    # emitted rows.
+    assert _leaves_equal(h1, h2) and _leaves_equal(r1, r2)
+    # count tallies exactly the accepted pushes per part.
+    want = np.sum([np.asarray(ok) for ok in oks], axis=0)
+    assert np.array_equal(np.asarray(h1["count"]), want)
+
+    # A masked part freezes EVERY history leaf at that event.
+    hist = predictor.init_history(M, L1, S, H)
+    for reps, ok in zip(seq[:3], oks[:3]):
+        hist, _ = predictor.update_history(
+            hist, reps, jnp.ones((M,), bool), cfg)
+    frozen, _ = predictor.update_history(
+        hist, seq[3], jnp.array([True, False, True]), cfg)
+    for leaf in ("prev", "ema", "coef", "count"):
+        assert jnp.array_equal(frozen[leaf][1], hist[leaf][1]), leaf
+    assert not jnp.array_equal(frozen["prev"][0], hist["prev"][0])
+
+
+@pytest.mark.parametrize("kind", ["delta", "ema"])
+def test_first_pushes_emit_zero_rows(kind):
+    # The coefficient starts at 0 and the first delta is gated, so the
+    # first two pushes predict NOTHING — pulls stay bitwise raw-stale.
+    M, L1, S, H = 2, 1, 4, 3
+    cfg = PredictorConfig(kind=kind)
+    hist = predictor.init_history(M, L1, S, H)
+    ok = jnp.ones((M,), bool)
+    for reps in _reps_seq(jax.random.PRNGKey(1), 2, (M, L1, S, H)):
+        hist, rows = predictor.update_history(hist, reps, ok, cfg)
+        assert not jnp.any(rows), rows
+    assert not jnp.any(hist["coef"])
+
+
+def test_coef_learns_linear_trajectory():
+    # reps_t = t·v: every per-sync delta equals v, the least-squares fit
+    # of realized change against the previous push's base rows is
+    # exactly 1, and the β-EMA coefficient climbs 0 → 0.5 → 0.75 → ...
+    M, L1, S, H = 2, 2, 4, 3
+    cfg = PredictorConfig(kind="delta", beta=0.5)
+    v = jax.random.normal(jax.random.PRNGKey(2), (M, L1, S, H))
+    hist = predictor.init_history(M, L1, S, H)
+    ok = jnp.ones((M,), bool)
+    coefs, rows = [], None
+    for t in range(1, 7):
+        hist, rows = predictor.update_history(hist, t * v, ok, cfg)
+        coefs.append(float(hist["coef"].min()))
+    assert coefs[0] == coefs[1] == 0.0          # no evidence yet
+    assert all(b > a for a, b in zip(coefs[2:], coefs[3:]))
+    assert coefs[-1] == pytest.approx(1.0, abs=0.1)
+    # Applying the emitted rows strictly reduces next-sync staleness:
+    # |reps_7 − (reps_6 + rows)| < |reps_7 − reps_6|.
+    raw_err = jnp.linalg.norm(7 * v - 6 * v)
+    pred_err = jnp.linalg.norm(7 * v - (6 * v + rows))
+    assert pred_err < 0.2 * raw_err, (pred_err, raw_err)
+    # The coefficient is clipped into [COEF_MIN, COEF_MAX] even when the
+    # trajectory reverses violently (fit would be far below -1).
+    hist2, _ = predictor.update_history(hist, -100 * v, ok, cfg)
+    assert jnp.all(hist2["coef"] >= predictor.COEF_MIN)
+    assert jnp.all(hist2["coef"] <= predictor.COEF_MAX)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        PredictorConfig(kind="linear")
+    with pytest.raises(ValueError):
+        PredictorConfig(kind="ema", beta=0.0)
+    assert not PredictorConfig().enabled
+    assert PredictorConfig(kind="ema").enabled
+
+
+# ---------------------------------------------------------------------------
+# The "none" contract + γ=0 additivity, on both engines
+# ---------------------------------------------------------------------------
+
+def _spmd_run(pcfg, epochs=8):
+    g = _graph()
+    data = prepare_graph_data(g, 4)
+    settings = TrainSettings(sync_interval=2, mode="digest",
+                             predictor=pcfg)
+    return digest_train(_cfg(g), adam(5e-3), data, settings, epochs,
+                        eval_every=epochs)
+
+
+def test_none_is_inert_and_gamma0_additive_spmd():
+    base, base_hist = _spmd_run(PredictorConfig())
+    assert "pstore" not in base and "predictor" not in base
+    # kind="none" ignores γ/β entirely — bitwise-identical run, no
+    # predictor leaves.
+    off, _ = _spmd_run(PredictorConfig(kind="none", gamma=7.0, beta=0.9))
+    assert _leaves_equal(base, off)
+    # Enabled predictor, γ=0: the consume-side epilogue adds exactly
+    # γ·pstore, so params/store/cache stay bitwise equal while the
+    # history leaves exist and advance.
+    g0, g0_hist = _spmd_run(PredictorConfig(kind="ema", gamma=0.0))
+    for key in ("params", "store", "cache", "opt_state"):
+        assert _leaves_equal(base[key], g0[key]), key
+    assert base_hist["loss"] == g0_hist["loss"]
+    assert {"pstore", "predictor", "pcache"} <= set(g0)
+    assert int(g0["predictor"]["count"].min()) > 0
+
+
+def test_none_is_inert_and_gamma0_additive_async():
+    g = _graph()
+    data = prepare_graph_data(g, 4)
+    cfg = _cfg(g)
+    base = dict(sync_interval=4, straggler=0, seed=3)
+
+    def run(pcfg):
+        return digest_a_train(cfg, adam(5e-3), data,
+                              AsyncSettings(predictor=pcfg, **base),
+                              total_rounds=24, eval_every_rounds=24)
+
+    s_plain, h_plain = run(PredictorConfig())
+    assert "pstore" not in s_plain
+    s_off, _ = run(PredictorConfig(kind="none", gamma=7.0, beta=0.9))
+    assert _leaves_equal(s_plain, s_off)
+    s_g0, h_g0 = run(PredictorConfig(kind="ema", gamma=0.0))
+    assert _leaves_equal(s_plain["params"], s_g0["params"])
+    assert h_plain["loss"] == h_g0["loss"]
+    assert h_plain["round_worker"] == h_g0["round_worker"]
+    assert "pstore" in s_g0
+    # An enabled γ>0 run actually diverges once predictions land —
+    # the parity above is additivity, not a dead code path.
+    s_on, _ = run(PredictorConfig(kind="ema"))
+    assert not _leaves_equal(s_plain["params"], s_on["params"])
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe resume with the history leaves
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_bitwise_with_history(tmp_path):
+    g = _graph()
+    data = prepare_graph_data(g, 4)
+    cfg = _cfg(g)
+    settings = TrainSettings(sync_interval=2, mode="digest",
+                             predictor=PredictorConfig(kind="ema"))
+    full, _ = digest_train(cfg, adam(5e-3), data, settings, 10,
+                           eval_every=10,
+                           ckpt_dir=str(tmp_path / "a"), ckpt_every=2)
+    # "Kill" after 6 epochs, then resume the SAME invocation to 10.
+    digest_train(cfg, adam(5e-3), data, settings, 6, eval_every=6,
+                 ckpt_dir=str(tmp_path / "b"), ckpt_every=2)
+    resumed, _ = digest_train(cfg, adam(5e-3), data, settings, 10,
+                              eval_every=10,
+                              ckpt_dir=str(tmp_path / "b"), ckpt_every=2,
+                              resume=True)
+    # Bitwise — including the pstore and every predictor history leaf.
+    assert {"pstore", "predictor", "pcache"} <= set(resumed)
+    assert _leaves_equal(full, resumed)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-HLO census arithmetic on the 8-device collective epoch
+# ---------------------------------------------------------------------------
+
+def _census_checks():
+    import hlo_utils
+    from repro.launch.mesh import make_host_mesh
+
+    D = 8
+    assert jax.device_count() >= D, jax.device_count()
+    mesh = make_host_mesh(data=D)
+    g = make_dataset("flickr-sim", scale=0.1, seed=5)
+    pcfg = PredictorConfig(kind="ema")
+
+    # gcn raw-store pull: +1 all_to_all per pstore tensor (data, or
+    # data+scale under int8); still zero all-gather / permute / rs.
+    for storage in ("fp32", "int8"):
+        compiled = hlo_utils.compile_epoch(
+            g, D, mesh, storage=storage, pull_mode="collective",
+            predictor=pcfg)
+        c = hlo_utils.collective_counts(compiled.as_text())
+        label = f"gcn {storage} predictor"
+        assert c["all-gather"] == 0, (label, c)
+        assert c["collective-permute"] == 0, (label, c)
+        assert c["reduce-scatter"] == 0, (label, c)
+        want = hlo_utils.expected_all_to_all(storage, predictor=True)
+        base = hlo_utils.expected_all_to_all(storage)
+        assert want == 2 * base          # the arithmetic being pinned
+        assert c["all-to-all"] == want, (label, c)
+
+    # GAT dedup: prediction folds into the owner-shard projection, the
+    # pulled z tensors are unchanged — the census must EQUAL the
+    # predictor-free program's op-for-op.
+    for storage in ("fp32", "int8"):
+        on = hlo_utils.collective_counts(hlo_utils.compile_epoch(
+            g, D, mesh, storage=storage, pull_mode="collective",
+            model="gat", predictor=pcfg).as_text())
+        off = hlo_utils.collective_counts(hlo_utils.compile_epoch(
+            g, D, mesh, storage=storage, pull_mode="collective",
+            model="gat").as_text())
+        assert on == off, (storage, on, off)
+        assert on["all-to-all"] == hlo_utils.expected_all_to_all(
+            storage, model="gat", predictor=True), (storage, on)
+
+
+@pytest.mark.forced_devices(8)
+def test_predictor_hlo_census_inprocess():
+    _census_checks()
+
+
+def test_predictor_hlo_census_subprocess():
+    """Force an 8-device CPU platform in a subprocess so the census
+    arithmetic is checked even on single-device hosts."""
+    if jax.device_count() >= 8:
+        pytest.skip("covered by the in-process variant")
+    import hlo_utils
+    hlo_utils.run_forced_device_subprocess(__file__, "SAT_CENSUS_OK")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    _census_checks()
+    print("SAT_CENSUS_OK")

@@ -31,12 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (HaloPrecision, TrainSettings, digest_train,
+from repro.core import (TrainSettings, digest_train,
                         init_sampled_state, make_sampled_epoch_fn,
                         prepare_graph_data, sampled_train)
 from repro.graph import build_sampler, make_dataset
 from repro.models.gnn import GNNConfig
 from repro.optim import adam, sgd
+
+pytestmark = pytest.mark.leg("sampling-smoke")
 
 
 @functools.lru_cache(maxsize=None)

@@ -30,6 +30,8 @@ from repro.launch.serving_driver import ServeStats, run_serve_loop
 from repro.models.gnn import GNNConfig, gnn_specs
 from repro.nn import init_params
 
+pytestmark = pytest.mark.leg("serving-smoke")
+
 
 @functools.lru_cache(maxsize=None)
 def _setup(parts: int = 4):

@@ -6,7 +6,6 @@ import sys
 import textwrap
 
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (DEFAULT_RULES, spec_for_axes)

@@ -32,10 +32,11 @@ from repro.core.halo_exchange import HaloPrecision
 from repro.graph import build_partitions, make_dataset
 from repro.graph.partition import build_chunk_worklist, greedy_partition
 from repro.kernels.spmm import (halo_spmm, halo_spmm_ref,
-                                halo_spmm_skip_pallas, halo_spmm_skip_ref,
-                                halo_spmm_stream_pallas)
+                                halo_spmm_skip_pallas, halo_spmm_skip_ref)
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
+
+pytestmark = pytest.mark.leg("m16-ppd2-hlo")
 
 
 def _clustered_case(rng, rows, deg, ntab, feat, dtype=np.float32):

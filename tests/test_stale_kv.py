@@ -1,5 +1,4 @@
 """Stale-KV block attention (DIGEST for long context)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

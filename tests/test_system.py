@@ -6,7 +6,6 @@ These mirror the paper's empirical claims at CPU scale:
   * Thm 1: staleness error within the analytic bound;
   * Fig. 7: async (DIGEST-A) beats sync wall-clock under a straggler.
 """
-import jax
 import numpy as np
 import pytest
 
